@@ -1,0 +1,47 @@
+"""Paper Fig. 7: communication time breakdown per step of the hierarchical
+synchronization (UL-Shard / DL-Shard / UL-aggr / DL-grad) vs the baselines'
+UL-grad / DL-grad, for bert-medium and the RL (atari) workload."""
+from __future__ import annotations
+
+from repro.serverless import (WORKLOADS, ObjectStore, ParamStore,
+                              comm_breakdown)
+
+N_WORKERS = 50
+SCHEMES = {"SMLT": "hier", "Cirrus": "ps", "Siren": "ps_s3"}
+
+
+def run() -> list:
+    ps, os_ = ParamStore(), ObjectStore()
+    rows = []
+    for wname in ("bert-medium", "atari-rl"):
+        w = WORKLOADS[wname]
+        for label, scheme in SCHEMES.items():
+            bd = comm_breakdown(scheme, w.grad_bytes, N_WORKERS, 4096, ps,
+                                os_, extra_upload_bytes=w.extra_upload_bytes)
+            for step, t in bd.items():
+                rows.append({"figure": "fig7", "workload": wname,
+                             "system": label, "step": step,
+                             "time_s": round(t, 3)})
+    return rows
+
+
+def summarize(rows) -> str:
+    def total(sys_, wl):
+        return sum(r["time_s"] for r in rows
+                   if r["system"] == sys_ and r["workload"] == wl)
+
+    dl_cirrus = [r["time_s"] for r in rows if r["system"] == "Cirrus"
+                 and r["step"] == "DL-grad" and r["workload"] == "bert-medium"][0]
+    dl_smlt = [r["time_s"] for r in rows if r["system"] == "SMLT"
+               and r["step"] == "DL-grad" and r["workload"] == "bert-medium"][0]
+    return (f"bert-medium DL-grad: Cirrus {dl_cirrus:.1f}s vs SMLT "
+            f"{dl_smlt:.1f}s ({dl_cirrus/dl_smlt:.1f}x); totals SMLT "
+            f"{total('SMLT','bert-medium'):.1f}s Cirrus "
+            f"{total('Cirrus','bert-medium'):.1f}s Siren "
+            f"{total('Siren','bert-medium'):.1f}s")
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)
+    print(summarize(run()))

@@ -1,0 +1,48 @@
+"""Paper Figs. 1, 2, 8: per-iteration communication time vs #workers for
+SMLT (hier) against Siren (ps_s3) and Cirrus (ps), all 5 paper workloads."""
+from __future__ import annotations
+
+from repro.serverless import (WORKLOADS, ObjectStore, ParamStore,
+                              comm_breakdown)
+
+WORKERS = [10, 25, 50, 100, 150, 200]
+SCHEMES = {"SMLT": "hier", "Cirrus": "ps", "Siren": "ps_s3"}
+
+
+def run() -> list:
+    ps, os_ = ParamStore(), ObjectStore()
+    rows = []
+    for wname, w in WORKLOADS.items():
+        for label, scheme in SCHEMES.items():
+            for n in WORKERS:
+                t = sum(comm_breakdown(
+                    scheme, w.grad_bytes, n, 4096, ps, os_,
+                    extra_upload_bytes=w.extra_upload_bytes).values())
+                rows.append({"figure": "fig8", "workload": wname,
+                             "system": label, "workers": n,
+                             "comm_s": round(t, 3)})
+    return rows
+
+
+def summarize(rows) -> str:
+    # headline: speedup of SMLT over the worst baseline at 200 workers
+    worst = {}
+    smlt = {}
+    for r in rows:
+        if r["workers"] != 200:
+            continue
+        if r["system"] == "SMLT":
+            smlt[r["workload"]] = r["comm_s"]
+        else:
+            worst[r["workload"]] = max(worst.get(r["workload"], 0),
+                                       r["comm_s"])
+    sp = [worst[k] / smlt[k] for k in smlt]
+    return (f"comm speedup vs worst baseline @200 workers: "
+            f"min {min(sp):.1f}x max {max(sp):.1f}x")
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print(summarize(rows))

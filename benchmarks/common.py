@@ -1,0 +1,31 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import Config, ConfigSpace, EpochPlan, Goal, TaskScheduler
+from repro.serverless import ObjectStore, ParamStore, ServerlessPlatform
+
+
+def fresh_scheduler(scheme: str = "hier", seed: int = 0, max_workers: int = 200,
+                    failure_rate: float = 0.0):
+    plat = ServerlessPlatform(failure_rate=failure_rate, seed=seed)
+    os_, ps = ObjectStore(), ParamStore()
+    sched = TaskScheduler(plat, os_, ps, scheme=scheme,
+                          space=ConfigSpace(max_workers=max_workers),
+                          seed=seed)
+    return sched, plat, os_, ps
+
+
+def fmt_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def timed(fn, *args, reps: int = 3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt * 1e6  # us

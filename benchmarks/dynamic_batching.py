@@ -1,0 +1,112 @@
+"""Paper Figs. 11a & 12: dynamic batching.
+
+ - Fig 11a: profiling + training cost for SMLT vs MLCD (VM-based MLaaS with
+   one-shot expensive VM profiling), LambdaML (serverless, fixed allocation)
+   and IaaS (fixed VM fleet), on resnet50 with a batch schedule.
+ - Fig 12: throughput / workers / batch-size timeline for SMLT vs LambdaML
+   when the batch size changes mid-training.
+"""
+from __future__ import annotations
+
+from repro.core import Config, EpochPlan, Goal
+from repro.core.cost_model import VM_TYPES, vm_epoch_estimate
+from repro.optim.schedules import step_batch
+from repro.serverless import WORKLOADS
+from benchmarks.common import fresh_scheduler
+
+W = WORKLOADS["resnet50"]
+SAMPLES = 100_000
+BATCHES = step_batch([256, 1024, 4096], epochs_per=2)
+
+
+def run() -> list:
+    rows = []
+    plans = [EpochPlan(b, W, samples=SAMPLES) for b in BATCHES]
+
+    # SMLT: adaptive, cheap serverless profiling at every change
+    sched, *_ = fresh_scheduler("hier", seed=0)
+    smlt = sched.run(plans, Goal("min_cost"))
+    rows.append({"figure": "fig11a", "system": "SMLT",
+                 "profile_usd": round(smlt.profile_usd, 3),
+                 "train_usd": round(smlt.cost_usd, 2),
+                 "total_usd": round(smlt.total_cost, 2)})
+
+    # LambdaML: serverless + ScatterReduce but fixed allocation, no
+    # profiling; sized by the user for the PEAK batch (over-provisioned
+    # for the small-batch epochs, Section 2.2)
+    sched, *_ = fresh_scheduler("hier", seed=0)
+    lml = sched.run(plans, Goal("min_cost"), adaptive=False,
+                    fixed_config=Config(workers=100, memory_mb=4096))
+    rows.append({"figure": "fig11a", "system": "LambdaML",
+                 "profile_usd": 0.0, "train_usd": round(lml.cost_usd, 2),
+                 "total_usd": round(lml.total_cost, 2)})
+
+    # MLCD: VM-based; Bayesian profiling ONCE on billed-by-the-hour VMs —
+    # paper [59]: tuning can reach ~60% of total — probes are full short
+    # runs on candidate fleet sizes, each paying VM spin-up minimums.
+    vm = VM_TYPES["c5.4xlarge"]
+    n_vms_peak = 16                      # provisioned for batch 4096
+    probes = 20
+    mlcd_profile = 0.0
+    for i in range(probes):
+        n = 2 + (i % 8) * 2
+        wall, usd = vm_epoch_estimate(W, vm, n, 1024, samples=30_000)
+        mlcd_profile += usd + n * vm.usd_hour * (120.0 / 3600.0)  # spin-up
+    # +50% over-provisioning for OOM robustness (Section 2.2)
+    mlcd_train = 1.5 * sum(
+        vm_epoch_estimate(W, vm, n_vms_peak, b, samples=SAMPLES)[1]
+        for b in BATCHES)
+    rows.append({"figure": "fig11a", "system": "MLCD",
+                 "profile_usd": round(mlcd_profile, 2),
+                 "train_usd": round(mlcd_train, 2),
+                 "total_usd": round(mlcd_profile + mlcd_train, 2)})
+
+    # IaaS: fixed VM fleet provisioned for peak, billed wall-clock incl.
+    # the inter-epoch setup gaps (20% duty overhead)
+    iaas_wall = 1.2 * sum(
+        vm_epoch_estimate(W, vm, n_vms_peak, b, samples=SAMPLES)[0]
+        for b in BATCHES)
+    iaas_usd = n_vms_peak * vm.usd_hour * iaas_wall / 3600.0
+    rows.append({"figure": "fig11a", "system": "IaaS", "profile_usd": 0.0,
+                 "train_usd": round(iaas_usd, 2),
+                 "total_usd": round(iaas_usd, 2)})
+
+    # Fig 12 timeline: throughput under a batch-size change; the goal here
+    # is throughput (min_time); LambdaML is frozen at SMLT's initial config
+    sched, *_ = fresh_scheduler("hier", seed=0)
+    smlt_t = sched.run(plans, Goal("min_time"))
+    sched, *_ = fresh_scheduler("hier", seed=0)
+    lml_t = sched.run(plans, Goal("min_time"), adaptive=False,
+                      fixed_config=smlt_t.config_history[0])
+    for res, name in ((smlt_t, "SMLT"), (lml_t, "LambdaML")):
+        for e in res.events:
+            if e.kind != "epoch":
+                continue
+            rows.append({"figure": "fig12", "system": name,
+                         "t_s": round(e.t, 1),
+                         "throughput": round(e.throughput, 1),
+                         "workers": e.workers, "batch": e.batch_size})
+    return rows
+
+
+def summarize(rows) -> str:
+    f11 = {r["system"]: r for r in rows if r["figure"] == "fig11a"}
+    smlt, lml = f11["SMLT"], f11["LambdaML"]
+    mlcd = f11["MLCD"]
+    tp = {}
+    for r in rows:
+        if r["figure"] == "fig12":
+            tp.setdefault(r["system"], []).append(r["throughput"])
+    adv = tp["SMLT"][-1] / tp["LambdaML"][-1]
+    return (f"total cost: SMLT ${smlt['total_usd']} vs LambdaML "
+            f"${lml['total_usd']} ({lml['total_usd']/smlt['total_usd']:.2f}x) "
+            f"vs MLCD ${mlcd['total_usd']} "
+            f"(profiling {mlcd['profile_usd']/mlcd['total_usd']*100:.0f}% of "
+            f"MLCD total); final-epoch throughput advantage {adv:.2f}x")
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print(summarize(rows))

@@ -1,0 +1,238 @@
+"""Analytic per-device FLOPs / HBM-bytes / collective-bytes model.
+
+Why analytic: XLA's ``cost_analysis()`` counts a ``while`` (scan) body ONCE
+regardless of trip count, so scanned-layer models under-report FLOPs and
+in-loop collectives by ~n_layers x. The dry-run remains the source of truth
+for *sharding coherence* and the *collective op mix*; the roofline terms are
+computed here from first principles and cross-checked against the dry-run
+numbers (see EXPERIMENTS.md §Roofline, "HLO vs analytic").
+
+All quantities are PER DEVICE on the given mesh. Hardware: TPU v5e-like —
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.models import registry
+from repro.models.base import INPUT_SHAPES, ModelConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+BYTES_P = 2          # bf16 params/activations
+BYTES_OPT = 8        # f32 mu+nu per param
+BYTES_ACT = 2
+
+
+@dataclasses.dataclass
+class Terms:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float          # total on the bottleneck link class
+    coll_cross_pod: float = 0.0
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes / ICI_BW
+
+    def dominant(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+
+def _attn_flops(cfg: ModelConfig, b, s_q, s_kv, n_layers, causal=True):
+    """Score + PV matmul flops (full, as lowered — masking is not skipped
+    by the jnp blockwise path)."""
+    if not cfg.n_heads:
+        return 0.0
+    hd = cfg.resolved_head_dim
+    return 4.0 * b * s_q * s_kv * cfg.n_heads * hd * n_layers
+
+
+def _ssd_flops(cfg: ModelConfig, b, s, n_layers):
+    if not cfg.ssm_state:
+        return 0.0
+    Q = cfg.ssm_chunk
+    h, p, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    per_tok = (2 * Q * n               # CB^T row (shared over heads)
+               + h * (2 * Q * p        # score @ x
+                      + 4 * n * p))    # state update + C@S
+    return b * s * per_tok * n_layers
+
+
+def _moe_dispatch_flops(cfg: ModelConfig, tokens, n_model: int = 1):
+    """Dispatch+combine one-hot einsums as lowered: 2 * g * E * C * d each
+    way per group of g tokens (E*C = cf*k*g slots). When the (padded)
+    expert axis divides the model mesh axis the contraction is expert-
+    parallel and the per-device cost divides by n_model."""
+    if not cfg.n_experts:
+        return 0.0
+    E, k = max(cfg.n_experts, cfg.moe_pad_experts), cfg.top_k
+    g = min(cfg.moe_group, tokens)
+    cap = max(cfg.moe_capacity_factor * k * g / E, 1.0)
+    per_dev = n_model if E % n_model == 0 else 1
+    return (tokens / g) * 2 * 2.0 * g * E * cap * cfg.d_model / per_dev
+
+
+def matmul_param_count(cfg: ModelConfig, active: bool = True) -> int:
+    """Params participating in matmuls (excl. token-embedding lookup)."""
+    total = registry.param_count(cfg, active_only=active)
+    vocab_embed = cfg.vocab_padded * cfg.d_model  # lookup table
+    return max(total - vocab_embed, 0)
+
+
+def step_terms(cfg: ModelConfig, shape_name: str, *, n_data: int = 16,
+               n_model: int = 16, n_pod: int = 1, strategy: str = "hier",
+               fsdp: bool = True, remat: bool = True,
+               flash_causal: bool = False) -> Terms:
+    """Roofline terms for one step of (arch x shape) on a mesh."""
+    shape = INPUT_SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    L = cfg.n_layers
+    dp = n_data * n_pod if b % (n_data * n_pod) == 0 else 1
+    b_dev = b // dp                           # per-device batch
+    P_mm = matmul_param_count(cfg, active=True)
+    P_all = registry.param_count(cfg)
+
+    if shape.kind == "train":
+        tokens_dev = b_dev * s
+        # full remat recomputes the whole fwd (4x); "dots" policy saves
+        # matmul outputs and only recomputes cheap elementwise work (3.1x)
+        if remat:
+            fwd_mults = 3.1 if cfg.remat_policy == "dots" else 4.0
+        else:
+            fwd_mults = 3.0
+        dense = 2.0 * P_mm / n_model * tokens_dev * fwd_mults
+        attn = _attn_flops(cfg, b_dev, s, s, L) / n_model * fwd_mults
+        if flash_causal:
+            attn *= 0.5
+        ssd = _ssd_flops(cfg, b_dev, s, L) / n_model * fwd_mults
+        moe = (_moe_dispatch_flops(cfg, tokens_dev, n_model)
+               * L * fwd_mults)
+        flops = dense + attn + ssd + moe
+
+        p_shard = P_all / n_model / (n_data if fsdp else 1)
+        # params read (fwd+bwd+remat) + grads written/read + opt state rw
+        hbm = (P_all / n_model * BYTES_P * fwd_mults
+               + p_shard * BYTES_P * 2
+               + P_all / n_model / n_data * (BYTES_OPT * 2 + 4))
+        # activations: boundaries under full remat; matmul outs under dots
+        act_unit = tokens_dev * cfg.d_model * BYTES_ACT
+        act_saved = 2 if (remat and cfg.remat_policy == "full") else 6
+        hbm += act_unit * L * act_saved
+
+        G = P_all / n_model * BYTES_P         # grad bytes per model shard
+        # wire bytes are ~2G for ring-AR and for RS+AG alike; the strategies
+        # differ in WHERE the bytes flow on a multi-pod mesh:
+        #   flat (allreduce / hier1): the ring spans pods -> ~G crosses the
+        #     pod-boundary link per device pair;
+        #   2-level (hier): RS intra-pod first -> only the G/n_data shard
+        #     is all-reduced across pods.
+        coll = 2.0 * G
+        if n_pod > 1:
+            if strategy in ("allreduce", "hier1"):
+                cross = G
+            else:                              # hier == 2-level on multi-pod
+                cross = 2.0 * G / n_data
+        else:
+            cross = 0.0
+        if fsdp:
+            coll += P_all / n_model * BYTES_P * (3 if remat else 2)  # param AG
+        # TP activation all-reduces (fwd + bwd mirror), 2x bytes per ring
+        # AR; sequence parallelism turns each AR into RS+AG = half the bytes
+        tp_bytes = 2.0 * _ar_per_layer(cfg) * 2.0 * act_unit * L
+        if cfg.seq_shard:
+            tp_bytes *= 0.5
+        coll += tp_bytes
+        if cfg.n_experts and cfg.n_experts % n_model == 0:
+            coll += 4.0 * tokens_dev * cfg.top_k * cfg.d_model * BYTES_ACT
+        return Terms(flops, hbm, coll, cross)
+
+    if shape.kind == "prefill":
+        tokens_dev = b_dev * s
+        dense = 2.0 * P_mm / n_model * tokens_dev
+        attn = _attn_flops(cfg, b_dev, s, s, L) / n_model
+        if flash_causal:
+            attn *= 0.5
+        ssd = _ssd_flops(cfg, b_dev, s, L) / n_model
+        moe = _moe_dispatch_flops(cfg, tokens_dev, n_model) * L
+        flops = dense + attn + ssd + moe
+        hbm = (P_all / n_model * BYTES_P
+               + tokens_dev * cfg.d_model * BYTES_ACT * L * 4)
+        coll = (_ar_per_layer(cfg) * 2.0 * tokens_dev * cfg.d_model
+                * BYTES_ACT * L)
+        return Terms(flops, hbm, coll)
+
+    # decode: one token against a seq_len cache
+    tokens_dev = b_dev
+    dense = 2.0 * P_mm / n_model * tokens_dev
+    if cfg.n_heads:
+        kv_len = min(s, cfg.sliding_window) if cfg.sliding_window else s
+    else:
+        kv_len = 0
+    attn = _attn_flops(cfg, b_dev, 1, kv_len, _attn_layers(cfg))
+    attn /= n_model
+    ssd = 0.0
+    if cfg.ssm_state:
+        h, p, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+        ssd = b_dev * h * (4 * n * p) * L / n_model
+    flops = dense + attn + ssd
+
+    hbm = P_all / n_model * BYTES_P            # every param read per token
+    if cfg.n_heads:
+        hd = cfg.resolved_head_dim
+        cache = (b_dev * kv_len * cfg.n_kv_heads * hd * 2 * BYTES_P
+                 * _attn_layers(cfg) / n_model)
+        hbm += cache
+    if cfg.ssm_state:
+        hbm += (b_dev * cfg.ssm_nheads * cfg.ssm_state * cfg.ssm_headdim
+                * 4 * 2 * L / n_model)
+    coll = (_ar_per_layer(cfg) * 2.0 * tokens_dev * cfg.d_model
+            * BYTES_ACT * L)
+    return Terms(flops, hbm, coll)
+
+
+def _ar_per_layer(cfg: ModelConfig) -> float:
+    """TP activation all-reduces per layer in the forward pass: one per
+    row-parallel projection (attn out + mlp out for dense; the single
+    out_proj for a mamba block; self+cross+mlp for enc-dec/vlm cross layers)."""
+    if cfg.family == "ssm":
+        return 1.0
+    if cfg.family == "hybrid":
+        return 1.0 + 2.0 / max(cfg.attn_every, 1)
+    if cfg.family == "audio":
+        return 3.0
+    if cfg.family == "vlm":
+        per = cfg.cross_attn_every
+        return 2.0 + (2.0 / per if per else 0.0)
+    return 2.0
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    if cfg.family == "vlm":
+        return cfg.n_layers  # self (4/5) + cross (1/5) both attend
+    return cfg.n_layers
+
+
+def model_flops_per_step(cfg: ModelConfig, shape_name: str) -> float:
+    """The 6·N·D (train) / 2·N·D (inference) 'useful FLOPs' yardstick —
+    N = active matmul params, D = tokens in the step (whole cluster)."""
+    shape = INPUT_SHAPES[shape_name]
+    n = matmul_param_count(cfg, active=True)
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    return (6.0 if shape.kind == "train" else 2.0) * n * tokens

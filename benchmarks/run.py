@@ -1,0 +1,64 @@
+"""Benchmark harness: one module per paper figure/table + roofline + kernels.
+
+    PYTHONPATH=src python -m benchmarks.run            # all benchmarks
+    PYTHONPATH=src python -m benchmarks.run fig7 fig8  # subset
+
+Prints a ``name,us_per_call,derived`` CSV line per benchmark (us_per_call is
+the harness wall time for that benchmark; `derived` is its headline result)
+followed by the §Roofline table. Detailed rows go to
+experiments/bench/<name>.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from benchmarks import (comm_breakdown, comm_scaling, config_sensitivity,
+                        dynamic_batching, kernels_bench, nas_adaptation,
+                        online_learning, optimizer_compare, roofline,
+                        scenarios, serving_slo, shard_ablation)
+
+BENCHES = {
+    "fig1_2_8_comm_scaling": comm_scaling,
+    "fig3_config_sensitivity": config_sensitivity,
+    "fig4_optimizer_compare": optimizer_compare,
+    "fig7_comm_breakdown": comm_breakdown,
+    "fig9_10_scenarios": scenarios,
+    "fig11a_12_dynamic_batching": dynamic_batching,
+    "fig11b_online_learning": online_learning,
+    "fig13_nas": nas_adaptation,
+    "footnote4_shard_ablation": shard_ablation,
+    "serving_slo_batching": serving_slo,
+    "kernels": kernels_bench,
+    "roofline": roofline,
+}
+
+OUT_DIR = "experiments/bench"
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(BENCHES)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    print("name,us_per_call,derived")
+    roofline_rows = None
+    for name in which:
+        mod = BENCHES[[k for k in BENCHES if name in k][0]] \
+            if name not in BENCHES else BENCHES[name]
+        t0 = time.perf_counter()
+        rows = mod.run()
+        us = (time.perf_counter() - t0) * 1e6
+        derived = mod.summarize(rows) if hasattr(mod, "summarize") else ""
+        print(f"{name},{us:.0f},\"{derived}\"", flush=True)
+        with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        if mod is roofline:
+            roofline_rows = rows
+    if roofline_rows is not None:
+        print()
+        print(roofline.table(roofline_rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Paper Figs. 9 & 10: user-centric deployment scenarios on bert-medium.
+
+Scenario 1: minimize cost s.t. training time <= 1 hour.
+Scenario 2: minimize time s.t. cost <= $50.
+
+SMLT optimizes for the goal (profiling time/cost charged, as in the paper's
+'for a fair comparison'); Siren and Cirrus are goal-oblivious: they run
+their fixed deployments and meet limits only by coincidence.
+"""
+from __future__ import annotations
+
+from repro.core import Config, EpochPlan, Goal
+from repro.serverless import WORKLOADS
+from benchmarks.common import fresh_scheduler
+
+W = WORKLOADS["bert-medium"]
+EPOCH_SAMPLES = 25_000
+EPOCHS = 8
+BATCH = 1024
+
+BASELINES = {
+    # goal-oblivious fixed deployments (replicated systems, Section 2.2)
+    "Siren": ("ps_s3", Config(workers=40, memory_mb=3072)),
+    "Cirrus": ("ps", Config(workers=60, memory_mb=6144)),
+}
+
+
+def _run(goal: Goal, stop_at_deadline: bool):
+    rows = []
+    sched, *_ = fresh_scheduler("hier", seed=0)
+    plans = [EpochPlan(BATCH, W, samples=EPOCH_SAMPLES) for _ in range(EPOCHS)]
+    res = sched.run(plans, goal, stop_at_deadline=stop_at_deadline)
+    rows.append({"system": "SMLT", "wall_s": round(res.wall_s, 1),
+                 "cost_usd": round(res.cost_usd, 2),
+                 "profile_s": round(res.profile_s, 1),
+                 "profile_usd": round(res.profile_usd, 2),
+                 "total_usd": round(res.total_cost, 2),
+                 "epochs": res.epochs_done})
+    for name, (scheme, cfgc) in BASELINES.items():
+        sched, *_ = fresh_scheduler(scheme, seed=0)
+        res = sched.run(plans, goal, adaptive=False, fixed_config=cfgc,
+                        stop_at_deadline=stop_at_deadline)
+        rows.append({"system": name, "wall_s": round(res.wall_s, 1),
+                     "cost_usd": round(res.cost_usd, 2), "profile_s": 0.0,
+                     "profile_usd": 0.0,
+                     "total_usd": round(res.total_cost, 2),
+                     "epochs": res.epochs_done})
+    return rows
+
+
+def run() -> list:
+    rows = []
+    s1 = _run(Goal("min_cost_deadline", deadline_s=3600.0),
+              stop_at_deadline=True)
+    for r in s1:
+        r.update(figure="fig9", scenario="deadline_1h",
+                 meets=(r["wall_s"] <= 3600.0))
+        rows.append(r)
+    s2 = _run(Goal("min_time_budget", budget_usd=50.0),
+              stop_at_deadline=False)
+    for r in s2:
+        r.update(figure="fig10", scenario="budget_50usd",
+                 meets=(r["total_usd"] <= 50.0))
+        rows.append(r)
+    return rows
+
+
+def summarize(rows) -> str:
+    s1 = {r["system"]: r for r in rows if r["figure"] == "fig9"}
+    s2 = {r["system"]: r for r in rows if r["figure"] == "fig10"}
+    out = []
+    out.append(
+        f"scenario1(1h): SMLT meets={s1['SMLT']['meets']} "
+        f"epochs={s1['SMLT']['epochs']} ${s1['SMLT']['total_usd']}"
+        f" | Siren meets={s1['Siren']['meets']} epochs={s1['Siren']['epochs']}"
+        f" | Cirrus meets={s1['Cirrus']['meets']} epochs={s1['Cirrus']['epochs']}")
+    best_base_t = min(s2["Siren"]["wall_s"], s2["Cirrus"]["wall_s"])
+    out.append(
+        f"scenario2($50): SMLT {s2['SMLT']['wall_s']:.0f}s vs best baseline "
+        f"{best_base_t:.0f}s ({best_base_t / s2['SMLT']['wall_s']:.1f}x faster)")
+    return "; ".join(out)
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print(summarize(rows))

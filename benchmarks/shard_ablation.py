@@ -1,0 +1,41 @@
+"""Paper footnote 4 ablation: the number of shards m vs workers n.
+
+"If m is greater than n, each worker aggregates multiple shards. Choosing
+m less than n will cause some workers to be idle during aggregation."
+We sweep m around n=64 for bert-medium and confirm m = n is the sweet
+spot: m < n leaves aggregators idle (DL-Shard inflates on the busy ones),
+m > n adds per-request latency for no bandwidth gain.
+"""
+from __future__ import annotations
+
+from repro.serverless import WORKLOADS, ObjectStore, ParamStore
+from repro.serverless.worker import comm_breakdown
+
+N = 64
+MS = [8, 16, 32, 64, 128, 256]
+W = WORKLOADS["bert-medium"]
+
+
+def run() -> list:
+    ps, os_ = ParamStore(), ObjectStore()
+    rows = []
+    for m in MS:
+        bd = comm_breakdown("hier", W.grad_bytes, N, 4096, ps, os_,
+                            n_shards=m)
+        rows.append({"figure": "footnote4", "m_shards": m, "n_workers": N,
+                     "comm_s": round(sum(bd.values()), 3),
+                     "dl_shard_s": round(bd["DL-Shard"], 3)})
+    return rows
+
+
+def summarize(rows) -> str:
+    best = min(rows, key=lambda r: r["comm_s"])
+    return (f"m=n={N} optimal at {dict((r['m_shards'], r['comm_s']) for r in rows)}"
+            if best["m_shards"] == N else
+            f"UNEXPECTED optimum m={best['m_shards']}")
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)
+    print(summarize(run()))

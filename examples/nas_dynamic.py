@@ -1,0 +1,66 @@
+"""Adaptive workflows demo: dynamic batching + NAS (paper Figs. 12-13).
+
+Shows the task scheduler's training-dynamics monitoring: when the batch
+size or candidate model changes, SMLT re-runs the Bayesian optimizer and
+redeploys; the fixed-allocation baseline (LambdaML-style) cannot.
+
+Run:  PYTHONPATH=src python examples/nas_dynamic.py
+"""
+from repro.core import EpochPlan, Goal
+from repro.optim.schedules import doubling_batch
+from repro.serverless import WORKLOADS
+
+
+def fresh_scheduler(scheme="hier", seed=0, max_workers=200):
+    from repro.core import ConfigSpace, TaskScheduler
+    from repro.serverless import ObjectStore, ParamStore, ServerlessPlatform
+    plat = ServerlessPlatform(seed=seed)
+    sched = TaskScheduler(plat, ObjectStore(), ParamStore(), scheme=scheme,
+                          space=ConfigSpace(max_workers=max_workers),
+                          seed=seed)
+    return (sched, plat)
+
+
+
+def timeline(res, label):
+    print(f"\n  {label}:")
+    print(f"  {'t(s)':>8s} {'batch':>6s} {'params':>8s} {'workers':>7s} "
+          f"{'mem(MB)':>8s} {'samples/s':>10s}")
+    for e in res.events:
+        if e.kind != "epoch":
+            continue
+        print(f"  {e.t:8.0f} {e.batch_size:6d} "
+              f"{e.model_params/1e6:7.0f}M {e.workers:7d} "
+              f"{e.memory_mb:8d} {e.throughput:10.1f}")
+    print(f"  -> wall {res.wall_s:,.0f}s, total ${res.total_cost:.2f}")
+
+
+def main():
+    w = WORKLOADS["resnet50"]
+    print("== dynamic batching (batch doubles every 2 epochs) ==")
+    batches = doubling_batch(256, 6, every=2)
+    plans = [EpochPlan(b, w, samples=50_000) for b in batches]
+    sched, *_ = fresh_scheduler("hier", seed=0)
+    adaptive = sched.run(plans, Goal("min_time"))
+    timeline(adaptive, "SMLT (adaptive)")
+    sched, *_ = fresh_scheduler("hier", seed=0)
+    fixed = sched.run(plans, Goal("min_time"), adaptive=False,
+                      fixed_config=adaptive.config_history[0])
+    timeline(fixed, "fixed allocation (LambdaML-style)")
+
+    print("\n== NAS / ENAS exploration (12 candidate child models) ==")
+    import numpy as np
+    from repro.serverless import Workload
+    rng = np.random.RandomState(0)
+    sizes = rng.choice([5e6, 11e6, 23e6, 46e6, 80e6, 110e6], size=12)
+    tokens = rng.choice([64, 256, 1024], size=12)
+    cands = [Workload(f"enas-{i}", int(s), 6.0 * s * t, 3_000, 10 ** 9)
+             for i, (s, t) in enumerate(zip(sizes, tokens))]
+    plans = [EpochPlan(512, c, samples=50_000) for c in cands]
+    sched, *_ = fresh_scheduler("hier", seed=0)
+    nas = sched.run(plans, Goal("min_time"))
+    timeline(nas, "SMLT (adaptive)")
+
+
+if __name__ == "__main__":
+    main()

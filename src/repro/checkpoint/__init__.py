@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    CheckpointMeta, DiskCheckpointer, StoreCheckpointer)

@@ -1,0 +1,153 @@
+"""Architecture registry: the 10 assigned architectures, the 4 input
+shapes, the reduced (smoke-test) variants, and ``input_specs()`` —
+ShapeDtypeStruct stand-ins for every model input (no device allocation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import INPUT_SHAPES, InputShape, ModelConfig
+
+from repro.configs import (arctic_480b, llama3p2_vision_90b, mamba2_2p7b,
+                           mistral_large_123b, olmo_1b, phi4_mini_3p8b,
+                           qwen2_moe_a2p7b, qwen2p5_3b, seamless_m4t_medium,
+                           zamba2_7b)
+
+ARCHS: Dict[str, ModelConfig] = {
+    m.CONFIG.arch_id: m.CONFIG
+    for m in (mamba2_2p7b, seamless_m4t_medium, qwen2_moe_a2p7b, arctic_480b,
+              olmo_1b, qwen2p5_3b, phi4_mini_3p8b, llama3p2_vision_90b,
+              zamba2_7b, mistral_large_123b)
+}
+
+# long_500k (524,288-token KV) runs only for sub-quadratic decode paths:
+# pure SSM and the hybrid's sliding-window attention. Pure full-attention
+# archs are skipped per the brief (see DESIGN.md §4).
+LONG_CONTEXT_ARCHS = ("mamba2-2.7b", "zamba2-7b")
+
+
+def supports(arch_id: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_id in LONG_CONTEXT_ARCHS
+    return True
+
+
+def pairs():
+    """All (arch, shape) combinations that must lower (10x4 minus skips)."""
+    for a in ARCHS:
+        for s in INPUT_SHAPES:
+            if supports(a, s):
+                yield a, s
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, weak-type-correct, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def n_frames_for(cfg: ModelConfig, seq_len: int) -> int:
+    return max(seq_len // 4, 16)
+
+
+def batch_extras(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
+    """Modality-frontend stubs (the one sanctioned carve-out)."""
+    out = {}
+    if cfg.family == "vlm":
+        out["image_embeds"] = _sds((batch, cfg.n_image_tokens, cfg.d_vision),
+                                   cfg.dtype)
+    if cfg.family == "audio":
+        out["audio_frames"] = _sds((batch, n_frames_for(cfg, seq_len),
+                                    cfg.d_audio), cfg.dtype)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    """Model inputs for one workload shape.
+
+    train:    {tokens, labels, (extras)}                     -> train_step
+    prefill:  {tokens, (extras)}                             -> prefill_step
+    decode:   {tokens: (B,1), pos: scalar, (extras)}         -> serve_step
+              (the KV/SSM cache spec is derived separately; see dryrun)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32)}
+        specs.update(batch_extras(cfg, b, s))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((b, s), jnp.int32)}
+        specs.update(batch_extras(cfg, b, s))
+        return specs
+    if shape.kind == "decode":
+        specs = {"tokens": _sds((b, 1), jnp.int32),
+                 "pos": _sds((), jnp.int32)}
+        specs.update(batch_extras(cfg, b, s))
+        return specs
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# reduced variants for CPU smoke tests (2 layers, d_model<=512, <=4 experts)
+# ---------------------------------------------------------------------------
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    kw = dict(
+        n_layers=2,
+        d_model=128,
+        d_ff=min(cfg.d_ff, 256) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 997),
+        dtype=jnp.float32,
+        remat=False,
+    )
+    if cfg.n_heads:
+        kw["n_heads"] = 4
+        kw["n_kv_heads"] = max(1, 4 * cfg.n_kv_heads // cfg.n_heads)
+        kw["head_dim"] = 32
+    if cfg.n_experts:
+        kw["n_experts"] = 4
+        kw["top_k"] = min(cfg.top_k, 2)
+        kw["n_shared_experts"] = min(cfg.n_shared_experts, 2)
+        # dropless at smoke scale so decode == prefill numerically
+        kw["moe_capacity_factor"] = float(4 // min(cfg.top_k, 2))
+    if cfg.ssm_state:
+        kw["ssm_state"] = 16
+        kw["ssm_headdim"] = 16
+        kw["ssm_chunk"] = 16
+    if cfg.attn_every:
+        kw["attn_every"] = 2
+        kw["n_layers"] = 5           # 2 groups of 2 + 1 remainder layer
+        kw["sliding_window"] = 32
+    if cfg.cross_attn_every:
+        kw["cross_attn_every"] = 2
+        kw["n_layers"] = 4
+        kw["n_image_tokens"] = 16
+        kw["d_vision"] = 64
+    if cfg.is_encdec:
+        kw["n_encoder_layers"] = 2
+        kw["n_audio_frames"] = 32
+        kw["d_audio"] = 64
+    return cfg.replace(**kw)
+
+
+def reduced_batch(cfg: ModelConfig, batch: int = 2, seq: int = 32,
+                  seed: int = 0) -> Dict:
+    """Concrete small batch for the reduced config (smoke tests/examples)."""
+    rng = jax.random.key(seed)
+    toks = jax.random.randint(rng, (batch, seq), 0, cfg.vocab_size)
+    out = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.random.normal(
+            rng, (batch, cfg.n_image_tokens, cfg.d_vision), cfg.dtype)
+    if cfg.family == "audio":
+        out["audio_frames"] = jax.random.normal(
+            rng, (batch, cfg.n_audio_frames, cfg.d_audio), cfg.dtype)
+    return out

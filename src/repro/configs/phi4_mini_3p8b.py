@@ -1,0 +1,20 @@
+"""phi4-mini-3.8b — RoPE SwiGLU GQA [arXiv:2412.08905].
+
+32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064.
+"""
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi4-mini-3.8b",
+    family="dense",
+    source="arXiv:2412.08905",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=200_064,
+    dtype=jnp.bfloat16,
+)

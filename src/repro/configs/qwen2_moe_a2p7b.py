@@ -1,0 +1,24 @@
+"""qwen2-moe-a2.7b — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+24L d_model=2048 16H (GQA kv=16) per-expert d_ff=1408 vocab=151936.
+"""
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-moe-a2.7b",
+    family="moe",
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151_936,
+    n_experts=60,
+    n_shared_experts=4,
+    top_k=4,
+    qkv_bias=True,
+    dtype=jnp.bfloat16,
+)

@@ -1,0 +1,17 @@
+"""SMLT's primary contribution: adaptive serverless ML training.
+
+ - hier_sync:   hierarchical model synchronization on JAX collectives
+ - bayes_opt:   GP + Expected Improvement deployment optimizer
+ - scheduler:   training-dynamics-aware task scheduler
+ - cost_model:  serverless + VM cost/time models
+ - elastic:     on-the-fly worker-fleet rescaling for the real-JAX path
+ - constraints: user-centric goals (deadline / budget)
+"""
+from repro.core.bayes_opt import (  # noqa: F401
+    GP, BayesianOptimizer, Config, ConfigSpace, expected_improvement)
+from repro.core.constraints import Goal  # noqa: F401
+from repro.core.hier_sync import (  # noqa: F401
+    STRATEGIES, allreduce_mean, make_sync_grad_fn, ps_mean,
+    scatter_reduce_mean, sync_grads, two_level_mean)
+from repro.core.scheduler import (  # noqa: F401
+    EpochPlan, RunResult, TaskScheduler, TraceEvent)

@@ -1,0 +1,176 @@
+"""Bayesian optimizer for deployment configuration search (paper Section 3.2).
+
+Gaussian-Process regression posterior + Expected Improvement acquisition,
+exactly as the paper specifies:
+
+    EI(C_i) = (y_best - mu(C_i)) * Phi(gamma) + sigma(C_i) * phi(gamma)
+
+(the paper's beta/theta are the standard normal CDF/PDF; y_max is "the
+current lowest value from all explored tuples", i.e. minimization). The
+search space is 2-D: number of workers (scale-out) x per-worker memory in MB
+(scale-up, 128MB..10GB at 1MB granularity per AWS Lambda quotas).
+
+Constrained goals (deadline / budget) use feasibility-weighted EI: a second
+GP models the constraint metric and EI is multiplied by P(feasible).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def _norm_cdf(x):
+    return 0.5 * (1.0 + np.vectorize(math.erf)(x / math.sqrt(2.0)))
+
+
+def _norm_pdf(x):
+    return np.exp(-0.5 * x * x) / math.sqrt(2.0 * math.pi)
+
+
+class GP:
+    """RBF-kernel GP regression with input scaling + output standardization."""
+
+    def __init__(self, length_scale: float = 0.2, noise: float = 1e-4,
+                 signal: float = 1.0):
+        self.ls = length_scale
+        self.noise = noise
+        self.signal = signal
+        self._fit = None
+
+    def _k(self, A, B):
+        d2 = ((A[:, None, :] - B[None, :, :]) ** 2).sum(-1)
+        return self.signal * np.exp(-0.5 * d2 / self.ls ** 2)
+
+    def fit(self, X: np.ndarray, y: np.ndarray):
+        X = np.atleast_2d(np.asarray(X, float))
+        y = np.asarray(y, float)
+        self.ymu, self.ystd = y.mean(), max(y.std(), 1e-12)
+        yn = (y - self.ymu) / self.ystd
+        K = self._k(X, X) + self.noise * np.eye(len(X))
+        self.L = np.linalg.cholesky(K)
+        self.alpha = np.linalg.solve(self.L.T, np.linalg.solve(self.L, yn))
+        self.X = X
+        self._fit = True
+        return self
+
+    def predict(self, Xs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        Xs = np.atleast_2d(np.asarray(Xs, float))
+        Ks = self._k(self.X, Xs)
+        mu = Ks.T @ self.alpha
+        v = np.linalg.solve(self.L, Ks)
+        var = np.maximum(self._k(Xs, Xs).diagonal() - (v * v).sum(0), 1e-12)
+        return mu * self.ystd + self.ymu, np.sqrt(var) * self.ystd
+
+
+def expected_improvement(mu, sigma, y_best):
+    """EI for minimization (paper's formula with y_best = lowest observed)."""
+    gamma = (y_best - mu) / np.maximum(sigma, 1e-12)
+    return (y_best - mu) * _norm_cdf(gamma) + sigma * _norm_pdf(gamma)
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """One deployment configuration C_i = <workers, memory>."""
+    workers: int
+    memory_mb: int
+
+    def as_unit(self, space: "ConfigSpace") -> np.ndarray:
+        return np.array([
+            (self.workers - space.min_workers)
+            / max(space.max_workers - space.min_workers, 1),
+            (self.memory_mb - space.min_memory)
+            / max(space.max_memory - space.min_memory, 1),
+        ])
+
+
+@dataclasses.dataclass
+class ConfigSpace:
+    min_workers: int = 1
+    max_workers: int = 200
+    min_memory: int = 128
+    max_memory: int = 10_240
+    memory_step: int = 1           # 1 MB granularity (paper / Lambda quotas)
+
+    def sample(self, rng: np.random.RandomState, n: int) -> List[Config]:
+        ws = rng.randint(self.min_workers, self.max_workers + 1, size=n)
+        ms = rng.randint(0, (self.max_memory - self.min_memory)
+                         // self.memory_step + 1, size=n)
+        return [Config(int(w), int(self.min_memory + m * self.memory_step))
+                for w, m in zip(ws, ms)]
+
+
+@dataclasses.dataclass
+class Observation:
+    config: Config
+    objective: float
+    constraint: Optional[float] = None  # metric compared against a threshold
+
+
+class BayesianOptimizer:
+    """Iterative GP+EI search; optionally constraint-aware."""
+
+    def __init__(self, space: ConfigSpace, *,
+                 constraint_limit: Optional[float] = None,
+                 n_init: int = 3, n_candidates: int = 512, seed: int = 0,
+                 ei_tolerance: float = 1e-3, max_iters: int = 20):
+        self.space = space
+        self.constraint_limit = constraint_limit
+        self.n_init = n_init
+        self.n_candidates = n_candidates
+        self.rng = np.random.RandomState(seed)
+        self.ei_tolerance = ei_tolerance
+        self.max_iters = max_iters
+        self.obs: List[Observation] = []
+
+    # -- bookkeeping ---------------------------------------------------------
+    def observe(self, config: Config, objective: float,
+                constraint: Optional[float] = None):
+        self.obs.append(Observation(config, float(objective),
+                                    None if constraint is None
+                                    else float(constraint)))
+
+    def _feasible(self, o: Observation) -> bool:
+        return (self.constraint_limit is None or o.constraint is None
+                or o.constraint <= self.constraint_limit)
+
+    def best(self) -> Optional[Observation]:
+        feas = [o for o in self.obs if self._feasible(o)]
+        pool = feas or self.obs
+        return min(pool, key=lambda o: o.objective) if pool else None
+
+    # -- acquisition ---------------------------------------------------------
+    def suggest(self) -> Config:
+        if len(self.obs) < self.n_init:
+            return self.space.sample(self.rng, 1)[0]
+        X = np.stack([o.config.as_unit(self.space) for o in self.obs])
+        y = np.array([o.objective for o in self.obs])
+        gp = GP().fit(X, y)
+        cands = self.space.sample(self.rng, self.n_candidates)
+        Xc = np.stack([c.as_unit(self.space) for c in cands])
+        best = self.best()
+        mu, sig = gp.predict(Xc)
+        acq = expected_improvement(mu, sig, best.objective)
+        if (self.constraint_limit is not None
+                and any(o.constraint is not None for o in self.obs)):
+            yc = np.array([o.constraint for o in self.obs])
+            gpc = GP().fit(X, yc)
+            mc, sc = gpc.predict(Xc)
+            p_feas = _norm_cdf((self.constraint_limit - mc)
+                               / np.maximum(sc, 1e-12))
+            acq = acq * p_feas
+        return cands[int(np.argmax(acq))]
+
+    def done(self) -> bool:
+        if len(self.obs) >= self.max_iters:
+            return True
+        if len(self.obs) <= self.n_init + 1:
+            return False
+        recent = [o.objective for o in self.obs[-3:] if self._feasible(o)]
+        best = self.best()
+        if best is None or len(recent) < 3:
+            return False
+        span = max(recent) - min(recent)
+        return span < self.ei_tolerance * max(abs(best.objective), 1e-9)

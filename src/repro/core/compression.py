@@ -1,0 +1,96 @@
+"""Gradient compression for the serverless synchronization path
+(beyond-paper: the paper identifies communication as THE serverless
+bottleneck; top-k sparsification with error feedback attacks the bytes
+directly, on top of the hierarchical schedule).
+
+Top-k + error feedback (Stich et al., "Sparsified SGD with memory"):
+each worker uploads only the k largest-magnitude gradient entries and
+keeps the residual locally; the residual is added to the next step's
+gradient, preserving convergence. Wire bytes per worker drop from 4·|G|
+to ~8·k (value + index), i.e. ratio/2 of dense for k = ratio·|G|.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def topk_compress(flat: np.ndarray, ratio: float) -> Tuple[np.ndarray,
+                                                           np.ndarray]:
+    """-> (indices int32, values f32) of the k = ratio*len largest-|.|."""
+    k = max(int(len(flat) * ratio), 1)
+    idx = np.argpartition(np.abs(flat), -k)[-k:].astype(np.int32)
+    return idx, flat[idx]
+
+
+def topk_decompress(idx: np.ndarray, vals: np.ndarray,
+                    size: int) -> np.ndarray:
+    out = np.zeros(size, np.float32)
+    out[idx] = vals
+    return out
+
+
+def compressed_bytes(size: int, ratio: float) -> float:
+    k = max(int(size * ratio), 1)
+    return 8.0 * k  # 4B value + 4B index
+
+
+@dataclasses.dataclass
+class ErrorFeedback:
+    """Per-worker residual memory."""
+    residual: np.ndarray
+
+    @classmethod
+    def init(cls, size: int) -> "ErrorFeedback":
+        return cls(np.zeros(size, np.float32))
+
+    def compress(self, flat: np.ndarray, ratio: float):
+        corrected = flat + self.residual
+        idx, vals = topk_compress(corrected, ratio)
+        sent = topk_decompress(idx, vals, len(flat))
+        self.residual = corrected - sent
+        return idx, vals
+
+
+class CompressedWorkerPool:
+    """LocalWorkerPool variant: workers upload top-k sparse gradients with
+    error feedback; the aggregator sums sparse contributions. Uses the same
+    param store interfaces so bytes are accounted."""
+
+    def __init__(self, grad_fn, n_workers: int, param_store, *,
+                 ratio: float = 0.05):
+        from repro.serverless.worker import flatten_grads, unflatten_grads
+        self._flatten = flatten_grads
+        self._unflatten = unflatten_grads
+        self.grad_fn = grad_fn
+        self.n = n_workers
+        self.store = param_store
+        self.ratio = ratio
+        self._ef: Dict[int, ErrorFeedback] = {}
+
+    def step(self, params, global_batch):
+        n = self.n
+        size = None
+        g_like = None
+        for w in range(n):
+            sl = jax.tree.map(
+                lambda x: x[w * (x.shape[0] // n):(w + 1) * (x.shape[0] // n)],
+                global_batch)
+            g = self.grad_fn(params, sl)
+            flat = self._flatten(g)
+            size, g_like = len(flat), g
+            if w not in self._ef:
+                self._ef[w] = ErrorFeedback.init(size)
+            idx, vals = self._ef[w].compress(flat, self.ratio)
+            nbytes = compressed_bytes(size, self.ratio)
+            self.store.put(f"sparse/{w}", (idx, vals), nbytes=nbytes)
+        acc = np.zeros(size, np.float32)
+        for w in range(n):
+            idx, vals = self.store.get(
+                f"sparse/{w}", nbytes=compressed_bytes(size, self.ratio))
+            acc[idx] += vals
+        return self._unflatten(acc / n, g_like)

@@ -1,0 +1,32 @@
+"""User-centric deployment goals (paper Section 3.2, Scenarios 1 & 2)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Goal:
+    """What the user asked SMLT to optimize.
+
+    kinds:
+      "min_cost_deadline" — minimize $ s.t. training time <= deadline_s  (Scenario 1)
+      "min_time_budget"   — minimize time s.t. $ <= budget_usd            (Scenario 2)
+      "min_time"          — as fast as possible
+      "min_cost"          — as cheap as possible
+    """
+    kind: str
+    deadline_s: Optional[float] = None
+    budget_usd: Optional[float] = None
+
+    def objective_and_constraint(self, time_s: float, cost_usd: float):
+        """-> (objective value, constraint value or None, limit or None)."""
+        if self.kind == "min_cost_deadline":
+            return cost_usd, time_s, self.deadline_s
+        if self.kind == "min_time_budget":
+            return time_s, cost_usd, self.budget_usd
+        if self.kind == "min_time":
+            return time_s, None, None
+        if self.kind == "min_cost":
+            return cost_usd, None, None
+        raise ValueError(self.kind)

@@ -1,0 +1,131 @@
+"""Monetary cost + wall-time estimation (the S_B(C) / T_B(C) of Section 3.2).
+
+Covers the serverless deployment (Lambda + S3 + Redis-on-ECS), the
+profiling runs the Bayesian optimizer pays for, and the VM baselines the
+paper compares against (IaaS and MLCD-style VM platforms).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.core.bayes_opt import Config
+from repro.serverless.platform import (LAMBDA_GB_SECOND, LAMBDA_PER_REQUEST,
+                                       LAMBDA_MAX_DURATION_S)
+from repro.serverless.stores import ObjectStore, ParamStore
+from repro.serverless.worker import Workload, iteration_time
+
+CHECKPOINT_RESTORE_S = 1.5       # restore model + iterator state on restart
+DATA_OBJECT_BYTES = 250e6        # paper: dataset split into <=250MB objects
+
+
+@dataclasses.dataclass
+class EpochEstimate:
+    wall_s: float
+    lambda_usd: float
+    store_usd: float
+    iters: int
+    it_breakdown: Dict[str, float]
+    restarts_per_worker: int
+
+    @property
+    def cost_usd(self) -> float:
+        return self.lambda_usd + self.store_usd
+
+    @property
+    def throughput(self) -> float:  # samples / s
+        return 0.0 if self.wall_s == 0 else (
+            self.iters * self._gb / self.wall_s)
+
+
+def epoch_estimate(w: Workload, scheme: str, config: Config,
+                   global_batch: int, param_store: ParamStore,
+                   object_store: ObjectStore, *,
+                   framework_init_s: float = 4.0,
+                   cold_start_s: float = 2.0,
+                   max_duration_s: float = LAMBDA_MAX_DURATION_S,
+                   samples: Optional[int] = None) -> EpochEstimate:
+    """Analytic time+cost of one epoch under deployment ``config``."""
+    n, mem = config.workers, config.memory_mb
+    samples = samples or w.dataset_samples
+    iters = max(math.ceil(samples / global_batch), 1)
+    it = iteration_time(w, scheme, n, mem, global_batch, param_store,
+                        object_store)
+
+    # duration-cap restarts (Section 4.1): amortize init across a full window
+    init_s = cold_start_s + framework_init_s
+    usable = max_duration_s - init_s - CHECKPOINT_RESTORE_S
+    epoch_compute_s = iters * it["total"]
+    invocations_per_worker = max(math.ceil(epoch_compute_s / usable), 1)
+    restart_overhead = (invocations_per_worker - 1) * (init_s + CHECKPOINT_RESTORE_S)
+
+    # per-epoch data fetch from the object store (data iterator, Section 4.2)
+    shard_bytes = w.sample_bytes * samples / n
+    data_fetch_s = object_store.get_time(shard_bytes, concurrent=n)
+    n_objects = max(math.ceil(w.sample_bytes * samples / DATA_OBJECT_BYTES), 1)
+
+    wall = epoch_compute_s + restart_overhead + init_s + data_fetch_s
+
+    lambda_usd = (n * mem / 1024.0 * wall * LAMBDA_GB_SECOND
+                  + n * invocations_per_worker * LAMBDA_PER_REQUEST)
+    # param store billed only while synchronization is running (Section 4.3)
+    sync_s = iters * it["comm"]
+    store_hourly = (param_store.vcpus * 0.04048
+                    + param_store.memory_gb * 0.004445)
+    store_usd = sync_s / 3600.0 * store_hourly
+    s3_usd = (n_objects * 0.0004 / 1000.0) * n  # GETs per epoch
+    est = EpochEstimate(wall_s=wall, lambda_usd=lambda_usd,
+                        store_usd=store_usd + s3_usd, iters=iters,
+                        it_breakdown=it,
+                        restarts_per_worker=invocations_per_worker - 1)
+    est._gb = global_batch
+    return est
+
+
+def profile_cost(w: Workload, scheme: str, config: Config, global_batch: int,
+                 param_store: ParamStore, object_store: ObjectStore,
+                 profile_iters: int = 3, *, framework_init_s: float = 4.0,
+                 cold_start_s: float = 2.0):
+    """Time+cost of one Bayesian-optimizer profiling probe (k iterations)."""
+    it = iteration_time(w, scheme, config.workers, config.memory_mb,
+                        global_batch, param_store, object_store)
+    wall = cold_start_s + framework_init_s + profile_iters * it["total"]
+    usd = (config.workers * config.memory_mb / 1024.0 * wall * LAMBDA_GB_SECOND
+           + config.workers * LAMBDA_PER_REQUEST)
+    return wall, usd, it
+
+
+# ---------------------------------------------------------------------------
+# VM baselines (IaaS / MLCD) for Figs. 9-11
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VmType:
+    name: str
+    vcpus: int
+    usd_hour: float
+    gflops: float
+    net_gbps: float
+
+
+VM_TYPES = {
+    "c5.2xlarge": VmType("c5.2xlarge", 8, 0.34, 8 * 45.0, 1.25),
+    "c5.4xlarge": VmType("c5.4xlarge", 16, 0.68, 16 * 45.0, 1.25),
+    "c5.9xlarge": VmType("c5.9xlarge", 36, 1.53, 36 * 45.0, 1.5),
+}
+
+
+def vm_epoch_estimate(w: Workload, vm: VmType, n_vms: int, global_batch: int,
+                      samples: Optional[int] = None):
+    """Ring-allreduce data-parallel training on VMs (the IaaS baseline)."""
+    samples = samples or w.dataset_samples
+    iters = max(math.ceil(samples / global_batch), 1)
+    local = max(global_batch // n_vms, 1)
+    comp = w.flops_per_sample * local / (vm.gflops * 1e9)
+    # ring allreduce: 2*(n-1)/n * G bytes over the NIC
+    comm = 2 * (n_vms - 1) / max(n_vms, 1) * w.grad_bytes / (vm.net_gbps / 8 * 1e9)
+    wall = iters * (comp + comm)
+    usd = n_vms * vm.usd_hour * wall / 3600.0
+    return wall, usd

@@ -1,0 +1,71 @@
+"""Elastic rescaling (paper Section 3.1: scale adaptation on the fly).
+
+On a serverless platform SMLT changes the worker fleet between epochs; the
+TPU analogue is re-instantiating the train step on a different sub-mesh and
+moving the checkpointed state onto it. State transfer is a device_put with
+the new NamedSharding — the JAX runtime performs the minimal resharding
+collective, which is exactly the "checkpoint -> redeploy -> restore" path of
+the paper with the object store replaced by ICI.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def make_data_mesh(n_workers: int, devices: Optional[Sequence] = None) -> Mesh:
+    """A 1-D `data` mesh over the first n_workers devices."""
+    devices = list(devices or jax.devices())[:n_workers]
+    return Mesh(np.array(devices), ("data",))
+
+
+def reshard(tree, mesh: Mesh, spec_fn: Callable = None):
+    """Move a pytree onto ``mesh``. spec_fn(path, leaf) -> PartitionSpec;
+    default replicates everything (parameters / optimizer state)."""
+    spec_fn = spec_fn or (lambda path, leaf: P())
+
+    def put(path, leaf):
+        return jax.device_put(leaf, NamedSharding(mesh, spec_fn(path, leaf)))
+
+    return jax.tree_util.tree_map_with_path(put, tree)
+
+
+def shard_batch(batch, mesh: Mesh, axes=("data",)):
+    """Shard a host batch along dim 0 over the data(-like) mesh axes."""
+    sh = NamedSharding(mesh, P(axes))
+    return jax.tree.map(lambda x: jax.device_put(x, sh), batch)
+
+
+class ElasticRunner:
+    """Owns (params, opt_state) and can rescale the worker fleet between
+    epochs while training continues — the semantic core of SMLT adaptation."""
+
+    def __init__(self, step_builder: Callable[[Mesh], Callable], params,
+                 opt_state, n_workers: int):
+        self._builder = step_builder
+        self.mesh = make_data_mesh(n_workers)
+        self.params = reshard(params, self.mesh)
+        self.opt_state = reshard(opt_state, self.mesh)
+        self.step = step_builder(self.mesh)
+        self.n_workers = n_workers
+        self.rescale_events = []
+
+    def rescale(self, n_workers: int):
+        if n_workers == self.n_workers:
+            return
+        self.mesh = make_data_mesh(n_workers)
+        self.params = reshard(self.params, self.mesh)
+        self.opt_state = reshard(self.opt_state, self.mesh)
+        self.step = self._builder(self.mesh)
+        self.rescale_events.append((self.n_workers, n_workers))
+        self.n_workers = n_workers
+
+    def train_step(self, batch):
+        batch = shard_batch(batch, self.mesh)
+        self.params, self.opt_state, loss = self.step(
+            self.params, self.opt_state, batch)
+        return loss

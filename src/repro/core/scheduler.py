@@ -1,0 +1,222 @@
+"""SMLT task scheduler (paper Sections 3.1 and 4.1).
+
+Maintains the *overarching view* of the training workflow across stateless
+function invocations: monitors per-iteration training dynamics, detects
+configuration changes (batch size for dynamic batching, model size for NAS),
+re-runs the Bayesian optimizer when they change, redeploys workers at the
+new <n_workers, memory> configuration, enforces the function duration cap
+with checkpoint/restart, and restarts failed workers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.bayes_opt import BayesianOptimizer, Config, ConfigSpace
+from repro.core.constraints import Goal
+from repro.core.cost_model import epoch_estimate, profile_cost
+from repro.serverless.platform import ServerlessPlatform
+from repro.serverless.stores import ObjectStore, ParamStore
+from repro.serverless.worker import Workload
+
+
+@dataclasses.dataclass
+class EpochPlan:
+    """One epoch of the (possibly dynamic) workflow."""
+    batch_size: int
+    workload: Workload                 # may differ per epoch (NAS)
+    samples: Optional[int] = None      # online learning: samples that arrived
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    t: float
+    epoch: int
+    kind: str                          # "epoch" | "profile" | "reoptimize"
+    throughput: float = 0.0            # samples / s
+    workers: int = 0
+    memory_mb: int = 0
+    batch_size: int = 0
+    model_params: int = 0
+    cost_cum: float = 0.0
+    restarts: int = 0
+    failures: int = 0
+
+
+@dataclasses.dataclass
+class RunResult:
+    events: List[TraceEvent]
+    wall_s: float
+    cost_usd: float
+    profile_s: float
+    profile_usd: float
+    epochs_done: int
+    config_history: List[Config]
+
+    @property
+    def total_cost(self):
+        return self.cost_usd + self.profile_usd
+
+
+class TaskScheduler:
+    def __init__(self, platform: ServerlessPlatform,
+                 object_store: ObjectStore, param_store: ParamStore, *,
+                 space: Optional[ConfigSpace] = None, scheme: str = "hier",
+                 profile_iters: int = 3, framework_init_s: float = 4.0,
+                 cold_start_s: float = 2.0, seed: int = 0,
+                 probe_cap_s: float = 180.0, bo_max_iters: int = 12):
+        self.platform = platform
+        self.object_store = object_store
+        self.param_store = param_store
+        self.space = space or ConfigSpace()
+        self.scheme = scheme
+        self.profile_iters = profile_iters
+        self.framework_init_s = framework_init_s
+        self.cold_start_s = cold_start_s
+        self.seed = seed
+        # probes longer than this are aborted and recorded as censored —
+        # the resource manager never lets a bad config burn real money
+        self.probe_cap_s = probe_cap_s
+        self.bo_max_iters = bo_max_iters
+
+    def _space_for(self, w: Workload) -> ConfigSpace:
+        """Resource-manager floor: the function must hold model + grads +
+        framework (Section 4.1) — prunes configs that could never run."""
+        model_mb = int(3 * 4 * w.param_count / 1e6) + 512
+        lo = min(max(self.space.min_memory, model_mb),
+                 self.space.max_memory - 1)
+        return ConfigSpace(min_workers=self.space.min_workers,
+                           max_workers=self.space.max_workers,
+                           min_memory=lo, max_memory=self.space.max_memory,
+                           memory_step=self.space.memory_step)
+
+    # -- Bayesian re-optimization (triggered on training-dynamics change) ----
+    def optimize(self, w: Workload, batch: int, goal: Goal,
+                 epochs_remaining: int, samples: Optional[int],
+                 warm_start: Optional[Config] = None):
+        """``warm_start`` (beyond-paper): seed the GP with the previous
+        deployment's config — good configs correlate across similar
+        workloads, so a warm re-optimization needs ~half the probes."""
+        limit = None
+        if goal.kind == "min_cost_deadline":
+            limit = goal.deadline_s
+        elif goal.kind == "min_time_budget":
+            limit = goal.budget_usd
+        space = self._space_for(w)
+        max_iters = self.bo_max_iters
+        if warm_start is not None:
+            max_iters = max(self.bo_max_iters // 2, 4)
+        bo = BayesianOptimizer(space, constraint_limit=limit,
+                               seed=self.seed, max_iters=max_iters)
+        seeds = []
+        if warm_start is not None:
+            seeds = [Config(min(max(warm_start.workers, space.min_workers),
+                                space.max_workers),
+                            min(max(warm_start.memory_mb, space.min_memory),
+                                space.max_memory))]
+        t_prof = usd_prof = 0.0
+        while not bo.done():
+            c = seeds.pop(0) if seeds else bo.suggest()
+            pt, pu, _ = profile_cost(
+                w, self.scheme, c, batch, self.param_store, self.object_store,
+                self.profile_iters, framework_init_s=self.framework_init_s,
+                cold_start_s=self.cold_start_s)
+            if pt > self.probe_cap_s:
+                # censored probe: abort at the cap, record a pessimistic
+                # objective so the GP steers away without full payment
+                frac = self.probe_cap_s / pt
+                t_prof += self.probe_cap_s
+                usd_prof += pu * frac
+                worst = max((o.objective for o in bo.obs), default=1.0)
+                bo.observe(c, worst * 10.0,
+                           None if limit is None else limit * 10.0)
+                continue
+            t_prof += pt
+            usd_prof += pu
+            est = epoch_estimate(
+                w, self.scheme, c, batch, self.param_store, self.object_store,
+                framework_init_s=self.framework_init_s,
+                cold_start_s=self.cold_start_s, samples=samples)
+            total_t = est.wall_s * epochs_remaining
+            total_c = est.cost_usd * epochs_remaining
+            obj, cons, _ = goal.objective_and_constraint(total_t, total_c)
+            bo.observe(c, obj, cons)
+        # probes run real training iterations (the paper profiles live
+        # throughput) — those samples count toward the epoch
+        useful = sum(1 for o in bo.obs) * self.profile_iters * batch
+        return bo.best().config, t_prof, usd_prof, useful
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, plans: List[EpochPlan], goal: Goal, *, adaptive: bool = True,
+            fixed_config: Optional[Config] = None,
+            stop_at_deadline: bool = False) -> RunResult:
+        events: List[TraceEvent] = []
+        t = 0.0
+        cost = 0.0
+        t_prof = usd_prof = 0.0
+        config: Optional[Config] = fixed_config
+        last_sig = None
+        history: List[Config] = []
+        epochs_done = 0
+        rng = np.random.RandomState(self.seed)
+
+        for i, plan in enumerate(plans):
+            sig = (plan.batch_size, plan.workload.param_count,
+                   plan.workload.flops_per_sample)
+            profiled_samples = 0
+            if config is None or (adaptive and sig != last_sig):
+                config, pt, pu, profiled_samples = self.optimize(
+                    plan.workload, plan.batch_size, goal,
+                    epochs_remaining=len(plans) - i, samples=plan.samples,
+                    warm_start=config)
+                t += pt
+                cost += pu
+                t_prof += pt
+                usd_prof += pu
+                events.append(TraceEvent(t, i, "reoptimize",
+                                         workers=config.workers,
+                                         memory_mb=config.memory_mb,
+                                         batch_size=plan.batch_size,
+                                         model_params=plan.workload.param_count,
+                                         cost_cum=cost))
+            last_sig = sig
+            history.append(config)
+
+            samples_plan = plan.samples or plan.workload.dataset_samples
+            samples_left = max(samples_plan - profiled_samples,
+                               plan.batch_size)
+            est = epoch_estimate(
+                plan.workload, self.scheme, config, plan.batch_size,
+                self.param_store, self.object_store,
+                framework_init_s=self.framework_init_s,
+                cold_start_s=self.cold_start_s, samples=samples_left)
+            # fault injection: failed iterations are redone (Section 4.1)
+            failures = int(rng.binomial(est.iters,
+                                        self.platform.failure_rate))
+            redo_s = failures * est.it_breakdown["total"]
+            wall = est.wall_s + redo_s
+            epoch_cost = est.cost_usd * (wall / est.wall_s)
+
+            if (stop_at_deadline and goal.deadline_s is not None
+                    and t + wall > goal.deadline_s):
+                break
+            t += wall
+            cost += epoch_cost
+            self.param_store.keep_alive(est.iters
+                                        * est.it_breakdown["comm"])
+            self.platform.ledger.charge_fn(
+                config.memory_mb * config.workers, wall)
+            epochs_done += 1
+            events.append(TraceEvent(
+                t, i, "epoch", throughput=samples_left / wall,
+                workers=config.workers, memory_mb=config.memory_mb,
+                batch_size=plan.batch_size,
+                model_params=plan.workload.param_count, cost_cum=cost,
+                restarts=est.restarts_per_worker, failures=failures))
+
+        return RunResult(events=events, wall_s=t, cost_usd=cost - usd_prof,
+                         profile_s=t_prof, profile_usd=usd_prof,
+                         epochs_done=epochs_done, config_history=history)

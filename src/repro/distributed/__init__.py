@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (  # noqa: F401
+    batch_specs, cache_specs, named, opt_state_specs, param_specs)

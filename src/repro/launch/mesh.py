@@ -1,0 +1,40 @@
+"""Production meshes. Functions, not module constants: importing this module
+never touches jax device state (the dry-run sets XLA_FLAGS first)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_custom_mesh(shape_str: str):
+    """'64x4' -> (data=64, model=4); '2x32x8' -> (pod=2, data=32, model=8).
+    The §Perf mesh-reshape experiments right-size TP to the model."""
+    dims = tuple(int(x) for x in shape_str.split("x"))
+    if len(dims) == 2:
+        return jax.make_mesh(dims, ("data", "model"))
+    if len(dims) == 3:
+        return jax.make_mesh(dims, ("pod", "data", "model"))
+    raise ValueError(shape_str)
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes of a mesh (pod folds into data-parallel)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def data_size(mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= axis_size(mesh, a)
+    return n

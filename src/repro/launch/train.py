@@ -1,0 +1,96 @@
+"""Training launcher.
+
+Two modes:
+ - real training on the available devices (reduced/any config that fits):
+     PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+         --steps 50 --batch 8 --seq 128
+ - production-mesh lowering check (delegates to dryrun for one pair):
+     PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --dry-run
+
+The SMLT strategy knob (--strategy hier|hier1|allreduce) selects the
+gradient-synchronization dataflow (see launch/steps.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs import ARCHS, reduced
+from repro.data import DataConfig, ShardedLoader, TokenDataset
+from repro.launch.steps import make_train_step
+from repro.models import registry
+from repro.optim import AdamW, warmup_cosine
+
+
+def make_local_mesh():
+    devs = np.array(jax.devices())
+    return Mesh(devs.reshape(len(devs), 1), ("data", "model"))
+
+
+def train(cfg, *, steps: int, batch: int, seq: int, strategy: str,
+          lr: float = 3e-4, log_every: int = 10, loader=None):
+    mesh = make_local_mesh()
+    opt = AdamW(lr=lr, schedule=warmup_cosine(max(steps // 20, 1), steps))
+    step_fn, pshard, oshard, bshard_fn = make_train_step(
+        cfg, mesh, strategy=strategy, optimizer=opt)
+    params = jax.device_put(registry.init(jax.random.key(0), cfg), pshard)
+    opt_state = jax.device_put(opt.init(params), oshard)
+
+    loader = loader or ShardedLoader(TokenDataset(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq)))
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        batch_np = loader.next_batch(batch)
+        b = {"tokens": jnp.asarray(batch_np["tokens"]),
+             "labels": jnp.asarray(batch_np["labels"])}
+        if cfg.family == "vlm":
+            b["image_embeds"] = jnp.zeros(
+                (batch, cfg.n_image_tokens, cfg.d_vision), cfg.dtype)
+        if cfg.family == "audio":
+            b["audio_frames"] = jnp.zeros(
+                (batch, cfg.n_audio_frames, cfg.d_audio), cfg.dtype)
+        params, opt_state, loss = step_fn(params, opt_state, b)
+        losses.append(float(loss))
+        if i % log_every == 0 or i == steps - 1:
+            dt = time.time() - t0
+            tput = (i + 1) * batch * seq / dt
+            print(f"step {i:5d}  loss {float(loss):.4f}  "
+                  f"{tput:,.0f} tok/s", flush=True)
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--strategy", default="hier",
+                    choices=["hier", "hier1", "allreduce"])
+    ap.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        from repro.launch import dryrun  # noqa: F401 (sets XLA_FLAGS? no —)
+        raise SystemExit(
+            "use `python -m repro.launch.dryrun` directly: it must set "
+            "XLA_FLAGS before jax initializes")
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced(cfg)
+    _, losses = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                      strategy=args.strategy, lr=args.lr)
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

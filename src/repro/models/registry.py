@@ -1,0 +1,112 @@
+"""Family registry: one uniform API over all architecture families.
+
+    init(rng, cfg)                 -> params
+    loss_fn(params, cfg, batch)    -> scalar loss           (train_4k)
+    prefill(params, cfg, batch)    -> (logits, cache)       (prefill_32k)
+    decode_step(params, cfg, cache, pos, tokens) -> (logits, cache)
+                                                      (decode_32k / long_500k)
+
+``batch`` is a dict: always {"tokens", "labels"}; plus "image_embeds" for
+vlm and "audio_frames" for audio enc-dec.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec, hybrid, mamba2, moe, transformer, vlm
+from repro.models.base import ModelConfig
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "vlm": vlm,
+    "audio": encdec,
+}
+
+
+def family_module(cfg: ModelConfig):
+    return _FAMILIES[cfg.family]
+
+
+def init(rng, cfg: ModelConfig):
+    return family_module(cfg).init(rng, cfg)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    return family_module(cfg).loss_fn(params, cfg, batch)
+
+
+def prefill(params, cfg: ModelConfig, batch, max_seq=None):
+    mod = family_module(cfg)
+    if cfg.family == "vlm":
+        return mod.prefill(params, cfg, batch["tokens"], batch["image_embeds"],
+                           max_seq=max_seq)
+    if cfg.family == "audio":
+        return mod.prefill(params, cfg, batch["tokens"], batch["audio_frames"],
+                           max_seq=max_seq)
+    return mod.prefill(params, cfg, batch["tokens"], max_seq=max_seq)
+
+
+def decode_step(params, cfg: ModelConfig, cache, pos, tokens):
+    return family_module(cfg).decode_step(params, cfg, cache, pos, tokens)
+
+
+def init_decode_cache(params, cfg: ModelConfig, batch: int, max_seq: int,
+                      batch_extras=None):
+    """Build an empty/derived cache for decode-only lowering (no prefill).
+
+    For cross-attention families the cross K/V is derived from the modality
+    embeddings in ``batch_extras``.
+    """
+    mod = family_module(cfg)
+    if cfg.family in ("dense", "moe"):
+        return mod.init_cache(cfg, batch, max_seq)
+    if cfg.family == "ssm":
+        return mod.init_cache(cfg, batch)
+    if cfg.family == "hybrid":
+        return mod.init_cache(cfg, batch, max_seq)
+    if cfg.family == "vlm":
+        ikv = vlm.image_kv_from_embeds(params, cfg, batch_extras["image_embeds"])
+        return {"self": vlm.init_self_cache(cfg, batch, max_seq),
+                "image_kv": ikv}
+    if cfg.family == "audio":
+        enc_out = encdec.encode(params, cfg, batch_extras["audio_frames"])
+        return {"self": encdec.init_self_cache(cfg, batch, max_seq),
+                "cross_kv": encdec.cross_kv(params, cfg, enc_out)}
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (no allocation: jax.eval_shape over init)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def _shapes(cfg: ModelConfig):
+    rng = jax.random.key(0)
+    return jax.eval_shape(lambda k: init(k, cfg), rng)
+
+
+def _tree_size(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = _shapes(cfg)
+    total = _tree_size(shapes)
+    if active_only and cfg.n_experts:
+        expert = _tree_size(shapes["blocks"]["moe"]["experts"])
+        total = total - expert + expert * cfg.top_k // cfg.n_experts
+    return total
+
+
+def param_bytes(cfg: ModelConfig) -> int:
+    shapes = _shapes(cfg)
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize
+                   for x in jax.tree.leaves(shapes)))

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, AdamWState, apply_sgd  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant, doubling_batch, fixed_batch, step_batch, warmup_cosine)

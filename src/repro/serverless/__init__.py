@@ -1,0 +1,4 @@
+from repro.serverless.platform import BillingLedger, ServerlessPlatform  # noqa: F401
+from repro.serverless.stores import ObjectStore, ParamStore  # noqa: F401
+from repro.serverless.worker import (  # noqa: F401
+    WORKLOADS, LocalWorkerPool, Workload, comm_breakdown, iteration_time)

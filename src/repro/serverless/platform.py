@@ -1,0 +1,120 @@
+"""Discrete-event serverless (FaaS) platform model.
+
+The paper's economics run on AWS Lambda + S3 + Redis-on-ECS. TPU pods are
+not pay-per-GB-second, so we keep the paper's *pricing and platform
+semantics* (cold starts, 15-minute duration caps, memory-proportional
+CPU/network, failures) in a deterministic simulator. The numerics of
+training itself run as real JAX (small models) or through an analytic
+workload model (paper-scale models); see ``repro.serverless.worker``.
+
+Constants are calibrated to public AWS pricing (us-east-1, 2022):
+  Lambda: $1.6667e-5 / GB-s, $2e-7 / request, 128MB..10240MB, 900s cap,
+          1 vCPU per 1769MB, network scales with memory up to ~600 Mbps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+LAMBDA_GB_SECOND = 1.6667e-5
+LAMBDA_PER_REQUEST = 2e-7
+LAMBDA_MAX_DURATION_S = 900.0
+LAMBDA_MIN_MEMORY_MB = 128
+LAMBDA_MAX_MEMORY_MB = 10_240
+MB_PER_VCPU = 1769.0
+PEAK_NET_GBPS = 0.075        # ~600 Mbit/s per function at full memory
+PEAK_CPU_GFLOPS = 40.0       # effective GFLOP/s of one Lambda vCPU (f32)
+
+
+def vcpus(memory_mb: float) -> float:
+    return min(6.0, max(memory_mb / MB_PER_VCPU, 0.07))
+
+
+def fn_gflops(memory_mb: float) -> float:
+    """Effective compute of one function — scales with allocated memory."""
+    return vcpus(memory_mb) * PEAK_CPU_GFLOPS
+
+
+def fn_net_gbps(memory_mb: float) -> float:
+    """Per-function network bandwidth (GB/s) — scales with memory, capped."""
+    return PEAK_NET_GBPS * min(1.0, memory_mb / 10_240 * 4)
+
+
+@dataclasses.dataclass
+class BillingLedger:
+    gb_seconds: float = 0.0
+    requests: int = 0
+    extra: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def charge_fn(self, memory_mb: float, duration_s: float):
+        self.gb_seconds += memory_mb / 1024.0 * duration_s
+        self.requests += 1
+
+    def charge(self, key: str, dollars: float):
+        self.extra[key] = self.extra.get(key, 0.0) + dollars
+
+    @property
+    def lambda_cost(self) -> float:
+        return (self.gb_seconds * LAMBDA_GB_SECOND
+                + self.requests * LAMBDA_PER_REQUEST)
+
+    @property
+    def total_cost(self) -> float:
+        return self.lambda_cost + sum(self.extra.values())
+
+
+@dataclasses.dataclass
+class InvocationRecord:
+    worker_id: int
+    start: float
+    end: float = 0.0
+    cold_start_s: float = 0.0
+    failed: bool = False
+
+
+class ServerlessPlatform:
+    """Deterministic FaaS simulator: invocations, cold starts, duration caps,
+    failure injection, and GB-second billing."""
+
+    def __init__(self, *, max_duration_s: float = LAMBDA_MAX_DURATION_S,
+                 cold_start_base_s: float = 0.25,
+                 cold_start_per_code_gb_s: float = 2.5,
+                 failure_rate: float = 0.0, seed: int = 0):
+        self.max_duration_s = max_duration_s
+        self.cold_start_base_s = cold_start_base_s
+        self.cold_start_per_code_gb_s = cold_start_per_code_gb_s
+        self.failure_rate = failure_rate
+        self.rng = np.random.RandomState(seed)
+        self.ledger = BillingLedger()
+        self.invocations: List[InvocationRecord] = []
+        self.now = 0.0
+
+    # -- invocation lifecycle ------------------------------------------------
+    def cold_start(self, code_size_mb: float, framework_init_s: float) -> float:
+        """Time from invoke to user code running: container + deps + framework
+        (e.g. ~4 s for Resnet-18 on TF per the paper, Section 4.1)."""
+        return (self.cold_start_base_s
+                + self.cold_start_per_code_gb_s * code_size_mb / 1024.0
+                + framework_init_s)
+
+    def invoke(self, worker_id: int, code_size_mb: float,
+               framework_init_s: float) -> InvocationRecord:
+        rec = InvocationRecord(worker_id=worker_id, start=self.now,
+                               cold_start_s=self.cold_start(
+                                   code_size_mb, framework_init_s))
+        self.invocations.append(rec)
+        return rec
+
+    def iteration_fails(self) -> bool:
+        return bool(self.rng.random_sample() < self.failure_rate)
+
+    def finish(self, rec: InvocationRecord, memory_mb: float, end: float):
+        rec.end = end
+        self.ledger.charge_fn(memory_mb, max(end - rec.start, 0.0))
+
+    # -- time ------------------------------------------------------------------
+    def advance(self, dt: float):
+        self.now += dt

@@ -1,0 +1,104 @@
+"""Hybrid storage models (paper Section 4.3).
+
+ - ``ObjectStore``: S3-like. High per-request latency, wide aggregate
+   bandwidth, priced per-request + per-GB-month. Holds code + training data
+   (infrequent access).
+ - ``ParamStore``: Redis-on-ECS-like. Sub-millisecond latency, node-limited
+   bandwidth, priced per container-hour while alive. Holds per-iteration
+   gradients/shards (frequent access). SMLT keeps it alive only during
+   synchronization phases.
+
+Both can also hold real payloads (numpy arrays) so the *semantic* training
+path (real JAX workers) uses the same interfaces as the analytic simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+# Pricing (us-east-1, 2022)
+S3_PUT_PER_1K = 0.005
+S3_GET_PER_1K = 0.0004
+S3_GB_MONTH = 0.023
+ECS_VCPU_HOUR = 0.04048
+ECS_GB_HOUR = 0.004445
+
+
+@dataclasses.dataclass
+class TransferStats:
+    puts: int = 0
+    gets: int = 0
+    bytes_in: float = 0.0
+    bytes_out: float = 0.0
+
+
+class ObjectStore:
+    """S3-like object store."""
+
+    def __init__(self, *, latency_s: float = 0.030,
+                 per_stream_gbps: float = 0.090,   # ~90 MB/s per connection
+                 aggregate_gbps: float = 100.0):
+        self.latency_s = latency_s
+        self.per_stream_gbps = per_stream_gbps
+        self.aggregate_gbps = aggregate_gbps
+        self.blobs: Dict[str, Any] = {}
+        self.stats = TransferStats()
+
+    def put_time(self, nbytes: float, concurrent: int = 1) -> float:
+        bw = min(self.per_stream_gbps, self.aggregate_gbps / max(concurrent, 1))
+        return self.latency_s + nbytes / 1e9 / bw
+
+    def get_time(self, nbytes: float, concurrent: int = 1) -> float:
+        return self.put_time(nbytes, concurrent)
+
+    def put(self, key: str, value: Any, nbytes: Optional[float] = None):
+        self.blobs[key] = value
+        self.stats.puts += 1
+        self.stats.bytes_in += nbytes or 0
+
+    def get(self, key: str, nbytes: Optional[float] = None) -> Any:
+        self.stats.gets += 1
+        self.stats.bytes_out += nbytes or 0
+        return self.blobs[key]
+
+    def request_cost(self) -> float:
+        return (self.stats.puts * S3_PUT_PER_1K / 1000.0
+                + self.stats.gets * S3_GET_PER_1K / 1000.0)
+
+
+class ParamStore:
+    """Redis-like in-memory KV store on an ECS container."""
+
+    def __init__(self, *, latency_s: float = 0.0008,
+                 node_gbps: float = 5.0,          # 40 Gbit/s ECS container
+                 vcpus: float = 2.0, memory_gb: float = 8.0):
+        self.latency_s = latency_s
+        self.node_gbps = node_gbps
+        self.vcpus = vcpus
+        self.memory_gb = memory_gb
+        self.blobs: Dict[str, Any] = {}
+        self.stats = TransferStats()
+        self.alive_seconds = 0.0   # only billed while synchronization runs
+
+    def xfer_time(self, nbytes: float, concurrent: int = 1,
+                  per_fn_gbps: float = 10.0) -> float:
+        bw = min(per_fn_gbps, self.node_gbps / max(concurrent, 1))
+        return self.latency_s + nbytes / 1e9 / bw
+
+    def put(self, key: str, value: Any, nbytes: Optional[float] = None):
+        self.blobs[key] = value
+        self.stats.puts += 1
+        self.stats.bytes_in += nbytes or 0
+
+    def get(self, key: str, nbytes: Optional[float] = None) -> Any:
+        self.stats.gets += 1
+        self.stats.bytes_out += nbytes or 0
+        return self.blobs[key]
+
+    def keep_alive(self, seconds: float):
+        self.alive_seconds += seconds
+
+    def container_cost(self) -> float:
+        hours = self.alive_seconds / 3600.0
+        return hours * (self.vcpus * ECS_VCPU_HOUR
+                        + self.memory_gb * ECS_GB_HOUR)

@@ -1,0 +1,213 @@
+"""SMLT worker model (paper Section 4.2).
+
+Two execution paths share the same interfaces:
+
+ - **Analytic path** (paper-scale models, e.g. BERT-medium x 200 workers):
+   per-iteration compute/communication times from a calibrated workload
+   model. This is what the paper-figure benchmarks use.
+ - **Semantic path** (``LocalWorkerPool``): n logical workers each compute
+   real JAX gradients on their minibatch slice and synchronize through the
+   (simulated) stores with real numpy payloads — used by tests/examples to
+   prove the hierarchical synchronization is exactly equivalent to
+   full-batch all-reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serverless.platform import fn_gflops, fn_net_gbps
+from repro.serverless.stores import ObjectStore, ParamStore
+
+# ---------------------------------------------------------------------------
+# analytic workload model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Workload:
+    """Calibrated description of one training task (paper Section 5.1)."""
+    name: str
+    param_count: int
+    flops_per_sample: float          # fwd+bwd FLOPs per training sample
+    sample_bytes: float              # bytes of one training sample
+    dataset_samples: int
+    extra_upload_bytes: float = 0.0  # e.g. Atari RL simulation data
+
+    @property
+    def grad_bytes(self) -> float:
+        return 4.0 * self.param_count  # f32 gradients
+
+
+# Paper benchmark models (Section 5.1)
+WORKLOADS = {
+    "resnet18": Workload("resnet18", 11_000_000, 5.4e9, 150e3, 1_281_167),
+    "resnet50": Workload("resnet50", 23_000_000, 12.0e9, 150e3, 1_281_167),
+    "bert-small": Workload("bert-small", 66_000_000, 5.1e10, 2_048, 1_000_000),
+    "bert-medium": Workload("bert-medium", 110_000_000, 8.4e10, 2_048, 1_000_000),
+    "atari-rl": Workload("atari-rl", 50_000_000, 4.0e10, 33_600, 50_000_000,
+                         extra_upload_bytes=4.0 * 50_000_000),
+}
+
+
+def compute_time(w: Workload, local_batch: int, memory_mb: float) -> float:
+    return w.flops_per_sample * local_batch / (fn_gflops(memory_mb) * 1e9)
+
+
+def comm_breakdown(scheme: str, grad_bytes: float, n_workers: int,
+                   memory_mb: float, param_store: ParamStore,
+                   object_store: ObjectStore,
+                   n_shards: Optional[int] = None,
+                   extra_upload_bytes: float = 0.0,
+                   topk_ratio: float = 0.05) -> Dict[str, float]:
+    """Per-iteration communication steps (paper Figs. 5 and 7).
+
+    schemes:
+      "hier"      — SMLT: shard -> aggregate -> redistribute via param store.
+      "hier_topk" — hier + top-k/error-feedback compressed uploads
+                    (beyond-paper; see repro.core.compression): upload
+                    bytes scale by 2*ratio (value+index per kept entry);
+                    the aggregated download densifies as min(1, n*ratio).
+      "ps"        — Cirrus-style central store (every worker downloads
+                    everyone's gradients).
+      "ps_s3"     — Siren-style: same pattern through the object store.
+    """
+    n = n_workers
+    m = n_shards or n
+    G = grad_bytes + extra_upload_bytes
+    fn_bw = fn_net_gbps(memory_mb) * 8  # not a bottleneck vs store; keep wide
+
+    if scheme == "hier_topk":
+        up = 2.0 * topk_ratio            # (4B value + 4B index) / 4B dense
+        dense_dl = min(1.0, n * topk_ratio)
+        t = lambda nbytes, req=1: (param_store.xfer_time(
+            nbytes, concurrent=n, per_fn_gbps=fn_bw)
+            + param_store.latency_s * max(req - 1, 0))
+        return {"UL-Shard": t(G * up, m), "DL-Shard": t(n * G * up / m, n),
+                "UL-aggr": t(G * dense_dl / m),
+                "DL-grad": t(G * dense_dl, m)}
+
+    if scheme == "hier":
+        def t(nbytes, requests=1):
+            return (param_store.xfer_time(nbytes, concurrent=n,
+                                          per_fn_gbps=fn_bw)
+                    + param_store.latency_s * max(requests - 1, 0))
+
+        # each of the busiest aggregators owns ceil(m/n) shards; with m < n
+        # the n-m idle workers don't help and the busy ones pull n*G/m
+        # (paper footnote 4: "m less than n will cause some workers to be
+        # idle during aggregation, which will affect performance")
+        shards_per_agg = max(math.ceil(m / n), 1)
+        return {
+            "UL-Shard": t(G, m),                      # own grad as m shards
+            "DL-Shard": t(shards_per_agg * n * (G / m),
+                          shards_per_agg * n),        # collect owned shards
+            "UL-aggr": t(shards_per_agg * G / m, shards_per_agg),
+            "DL-grad": t(m * (G / m), m),             # all aggregated shards
+        }
+    if scheme == "ps":
+        t = lambda nbytes: param_store.xfer_time(nbytes, concurrent=n,
+                                                 per_fn_gbps=fn_bw)
+        return {"UL-grad": t(G), "DL-grad": t(n * G)}
+    if scheme == "ps_s3":
+        return {"UL-grad": object_store.put_time(G, concurrent=n),
+                "DL-grad": object_store.get_time(n * G, concurrent=n)}
+    raise ValueError(scheme)
+
+
+def iteration_time(w: Workload, scheme: str, n_workers: int, memory_mb: float,
+                   global_batch: int, param_store: ParamStore,
+                   object_store: ObjectStore) -> Dict[str, float]:
+    local_batch = max(global_batch // n_workers, 1)
+    comm = comm_breakdown(scheme, w.grad_bytes, n_workers, memory_mb,
+                          param_store, object_store,
+                          extra_upload_bytes=w.extra_upload_bytes)
+    comp = compute_time(w, local_batch, memory_mb)
+    return {"compute": comp, "comm": sum(comm.values()),
+            "total": comp + sum(comm.values()), **comm}
+
+
+# ---------------------------------------------------------------------------
+# gradient sharding math (shared by simulator + semantic path + tests)
+# ---------------------------------------------------------------------------
+
+
+def flatten_grads(grads) -> np.ndarray:
+    leaves = jax.tree.leaves(grads)
+    return np.concatenate([np.asarray(x, dtype=np.float32).ravel()
+                           for x in leaves])
+
+
+def unflatten_grads(flat: np.ndarray, grads_like):
+    leaves, treedef = jax.tree.flatten(grads_like)
+    out, off = [], 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        out.append(flat[off:off + n].reshape(leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def make_shards(flat: np.ndarray, m: int) -> List[np.ndarray]:
+    """Split a flat gradient into m near-equal shards (shard generator, Fig 5)."""
+    pad = (-len(flat)) % m
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, flat.dtype)])
+    return list(flat.reshape(m, -1))
+
+
+def join_shards(shards: List[np.ndarray], size: int) -> np.ndarray:
+    return np.concatenate(shards)[:size]
+
+
+class LocalWorkerPool:
+    """Semantic SMLT: n logical workers with real JAX grads, synchronizing
+    via the (simulated) param store exactly as Figure 5 prescribes.
+
+    ``use_kernel=True`` runs the shard aggregation (step 3 of Fig. 5)
+    through the Pallas ``hier_agg`` kernel instead of numpy."""
+
+    def __init__(self, grad_fn: Callable, n_workers: int,
+                 param_store: ParamStore, *, use_kernel: bool = False):
+        self.grad_fn = grad_fn
+        self.n = n_workers
+        self.store = param_store
+        self.use_kernel = use_kernel
+
+    def step(self, params, global_batch) -> Dict:
+        """global_batch: dict of arrays with leading dim divisible by n.
+        Returns the aggregated (mean) gradient pytree."""
+        n = self.n
+        shards_meta = None
+        # (1) each worker computes grads on its slice, shards, uploads
+        for w in range(n):
+            sl = jax.tree.map(
+                lambda x: x[w * (x.shape[0] // n):(w + 1) * (x.shape[0] // n)],
+                global_batch)
+            g = self.grad_fn(params, sl)
+            flat = flatten_grads(g)
+            shards = make_shards(flat, n)
+            shards_meta = (len(flat), g)
+            for j, s in enumerate(shards):
+                self.store.put(f"shard/{w}/{j}", s, nbytes=s.nbytes)
+        # (2) worker j aggregates shard j from all workers (mean), re-uploads
+        for j in range(self.n):
+            stacked = np.stack([self.store.get(f"shard/{w}/{j}")
+                                for w in range(n)])
+            if self.use_kernel:
+                from repro.kernels import ops as kops
+                agg = np.asarray(kops.aggregate_shards(jnp.asarray(stacked)))
+            else:
+                agg = stacked.mean(axis=0)
+            self.store.put(f"aggr/{j}", agg, nbytes=agg.nbytes)
+        # (3) every worker downloads all aggregated shards -> updated model;
+        # they are identical, so reconstruct once.
+        flat_size, g_like = shards_meta
+        agg = [self.store.get(f"aggr/{j}") for j in range(n)]
+        mean_flat = join_shards(agg, flat_size)
+        return unflatten_grads(mean_flat, g_like)

@@ -1,0 +1,91 @@
+"""Bayesian optimizer: GP posterior, EI closed form, convergence,
+constraint-aware search (paper Section 3.2)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (GP, BayesianOptimizer, Config, ConfigSpace,
+                        expected_improvement)
+
+
+def test_gp_interpolates_training_points():
+    X = np.array([[0.1, 0.2], [0.5, 0.9], [0.9, 0.1], [0.3, 0.6]])
+    y = np.array([1.0, -2.0, 3.0, 0.5])
+    gp = GP(noise=1e-8).fit(X, y)
+    mu, sig = gp.predict(X)
+    np.testing.assert_allclose(mu, y, atol=1e-4)
+    assert np.all(sig < 1e-2)
+
+
+def test_gp_uncertainty_grows_away_from_data():
+    X = np.array([[0.5, 0.5]])
+    gp = GP().fit(X, np.array([0.0]))
+    _, s_near = gp.predict(np.array([[0.52, 0.5]]))
+    _, s_far = gp.predict(np.array([[0.0, 1.0]]))
+    assert s_far[0] > s_near[0]
+
+
+def test_ei_closed_form():
+    """EI(c) = (y* - mu) Phi(gamma) + sigma phi(gamma), gamma = (y*-mu)/sigma."""
+    mu, sigma, ybest = np.array([1.0]), np.array([2.0]), 0.5
+    gamma = (ybest - mu) / sigma
+    phi = math.exp(-0.5 * gamma[0] ** 2) / math.sqrt(2 * math.pi)
+    Phi = 0.5 * (1 + math.erf(gamma[0] / math.sqrt(2)))
+    want = (ybest - mu[0]) * Phi + sigma[0] * phi
+    got = expected_improvement(mu, sigma, ybest)[0]
+    assert abs(got - want) < 1e-12
+
+
+def test_ei_zero_at_no_uncertainty_worse_point():
+    got = expected_improvement(np.array([2.0]), np.array([1e-15]), 1.0)[0]
+    assert got <= 1e-9
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=8, deadline=None)
+def test_bo_beats_random_on_bowl(seed):
+    space = ConfigSpace(max_workers=100)
+
+    def f(c):
+        return ((c.workers - 37) / 100.0) ** 2 + ((c.memory_mb - 5000) / 10240.0) ** 2
+
+    bo = BayesianOptimizer(space, seed=seed, max_iters=15)
+    while not bo.done():
+        c = bo.suggest()
+        bo.observe(c, f(c))
+    rng = np.random.RandomState(seed)
+    rand_best = min(f(c) for c in space.sample(rng, len(bo.obs)))
+    assert bo.best().objective <= rand_best + 0.02
+
+
+def test_bo_respects_constraint():
+    """min cost s.t. time <= limit: best() must be feasible when feasible
+    points were observed."""
+    space = ConfigSpace(max_workers=50)
+
+    def cost(c):
+        return c.workers * c.memory_mb / 1e4
+
+    def time_s(c):
+        return 1000.0 / c.workers
+
+    bo = BayesianOptimizer(space, constraint_limit=100.0, seed=0, max_iters=20)
+    while not bo.done():
+        c = bo.suggest()
+        bo.observe(c, cost(c), time_s(c))
+    best = bo.best()
+    assert time_s(best.config) <= 100.0            # feasible
+    assert best.config.workers >= 10               # implied by constraint
+
+
+def test_bo_converges_in_bounded_probes():
+    bo = BayesianOptimizer(ConfigSpace(), seed=3, max_iters=12)
+    n = 0
+    while not bo.done():
+        c = bo.suggest()
+        bo.observe(c, (c.workers / 200.0) ** 2)
+        n += 1
+    assert n <= 12

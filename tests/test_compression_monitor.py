@@ -1,0 +1,111 @@
+"""Gradient compression (top-k + error feedback) and the training-dynamics
+monitor (EWMA/CUSUM change detection)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.compression import (CompressedWorkerPool, ErrorFeedback,
+                                    compressed_bytes, topk_compress,
+                                    topk_decompress)
+from repro.core.monitor import ThroughputMonitor
+from repro.serverless import ParamStore
+
+
+# -- top-k + error feedback --------------------------------------------------
+
+
+@given(size=st.integers(4, 300), ratio=st.sampled_from([0.01, 0.1, 0.5]))
+@settings(max_examples=25, deadline=None)
+def test_topk_roundtrip_keeps_largest(size, ratio):
+    rng = np.random.RandomState(size)
+    flat = rng.randn(size).astype(np.float32)
+    idx, vals = topk_compress(flat, ratio)
+    back = topk_decompress(idx, vals, size)
+    k = max(int(size * ratio), 1)
+    assert len(idx) == k
+    # the kept entries are exactly the k largest-|.|
+    kept = set(idx.tolist())
+    order = np.argsort(-np.abs(flat))
+    assert kept == set(order[:k].tolist())
+    np.testing.assert_array_equal(back[idx], flat[idx])
+
+
+def test_error_feedback_preserves_total_signal():
+    """sum over steps of (sent + residual delta) == sum of gradients."""
+    ef = ErrorFeedback.init(50)
+    rng = np.random.RandomState(0)
+    total_grad = np.zeros(50, np.float32)
+    total_sent = np.zeros(50, np.float32)
+    for _ in range(20):
+        g = rng.randn(50).astype(np.float32)
+        total_grad += g
+        idx, vals = ef.compress(g, 0.1)
+        total_sent += topk_decompress(idx, vals, 50)
+    np.testing.assert_allclose(total_sent + ef.residual, total_grad,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_compressed_training_converges():
+    """Least squares with 5% top-k + EF reaches near the dense optimum."""
+    rng = np.random.RandomState(1)
+    X = jnp.array(rng.randn(64, 20), jnp.float32)
+    w_true = jnp.array(rng.randn(20, 1), jnp.float32)
+    y = X @ w_true
+    params = {"w": jnp.zeros((20, 1))}
+    batch = {"x": X, "y": y}
+
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+
+    gf = jax.jit(lambda p, b: jax.grad(loss)(p, b))
+    pool = CompressedWorkerPool(gf, 4, ParamStore(), ratio=0.05)
+    lr = 0.3
+    for _ in range(300):
+        g = pool.step(params, batch)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+    assert float(loss(params, batch)) < 1e-2
+
+
+def test_compression_reduces_accounted_bytes():
+    store_dense = ParamStore()
+    store_sparse = ParamStore()
+    rng = np.random.RandomState(0)
+    params = {"w": jnp.array(rng.randn(100, 10), jnp.float32)}
+    batch = {"x": jnp.array(rng.randn(8, 100), jnp.float32),
+             "y": jnp.array(rng.randn(8, 10), jnp.float32)}
+
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+
+    gf = lambda p, b: jax.grad(loss)(p, b)
+    from repro.serverless import LocalWorkerPool
+    LocalWorkerPool(gf, 4, store_dense).step(params, batch)
+    CompressedWorkerPool(gf, 4, store_sparse, ratio=0.05).step(params, batch)
+    assert store_sparse.stats.bytes_in < store_dense.stats.bytes_in * 0.2
+
+
+# -- monitor ------------------------------------------------------------------
+
+
+def test_monitor_detects_sustained_shift():
+    m = ThroughputMonitor()
+    rng = np.random.RandomState(0)
+    fired_before = any(m.observe(100 + rng.randn()) for _ in range(50))
+    assert not fired_before
+    fired = [m.observe(60 + rng.randn()) for _ in range(30)]
+    assert any(fired)
+
+
+def test_monitor_ignores_noise_and_single_spikes():
+    m = ThroughputMonitor()
+    rng = np.random.RandomState(1)
+    fired = []
+    for i in range(200):
+        x = 100 + 3 * rng.randn()
+        if i == 97:
+            x = 140.0  # single spike
+        fired.append(m.observe(x))
+    assert not any(fired)

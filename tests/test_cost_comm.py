@@ -1,0 +1,92 @@
+"""Cost model + communication model properties (paper Sections 3.3, 4.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Config
+from repro.core.cost_model import epoch_estimate, vm_epoch_estimate, VM_TYPES
+from repro.serverless import (WORKLOADS, ObjectStore, ParamStore,
+                              comm_breakdown, iteration_time)
+from repro.serverless.platform import fn_gflops, fn_net_gbps
+
+W = WORKLOADS["bert-small"]
+
+
+def _stores():
+    return ParamStore(), ObjectStore()
+
+
+def test_hier_beats_ps_and_s3_at_scale():
+    """The paper's core claim (Figs. 7-8): hierarchical sync's DL-grad is
+    O(G) vs the centralized baselines' O(n*G)."""
+    ps, os_ = _stores()
+    for n in (16, 64, 200):
+        h = comm_breakdown("hier", W.grad_bytes, n, 4096, ps, os_)
+        c = comm_breakdown("ps", W.grad_bytes, n, 4096, ps, os_)
+        s = comm_breakdown("ps_s3", W.grad_bytes, n, 4096, ps, os_)
+        assert sum(h.values()) < sum(c.values())
+        assert sum(h.values()) < sum(s.values())
+        # the baselines' bottleneck step is DL-grad, as in Fig. 7
+        assert c["DL-grad"] > c["UL-grad"]
+        assert h["DL-grad"] < c["DL-grad"] / 4
+
+
+@given(n=st.sampled_from([16, 32, 64, 128]))
+@settings(max_examples=10, deadline=None)
+def test_comm_grows_linearly_with_workers(n):
+    """Fig. 8: communication grows ~linearly in n for all schemes."""
+    ps, os_ = _stores()
+    t1 = sum(comm_breakdown("hier", W.grad_bytes, n, 4096, ps, os_).values())
+    t2 = sum(comm_breakdown("hier", W.grad_bytes, 2 * n, 4096, ps, os_).values())
+    assert 1.5 < t2 / t1 < 2.5
+
+
+def test_memory_scales_compute_and_network():
+    assert fn_gflops(8192) > fn_gflops(1024)
+    assert fn_net_gbps(8192) > fn_net_gbps(512)
+
+
+def test_more_workers_less_compute_more_comm():
+    ps, os_ = _stores()
+    a = iteration_time(W, "hier", 8, 4096, 2048, ps, os_)
+    b = iteration_time(W, "hier", 64, 4096, 2048, ps, os_)
+    assert b["compute"] < a["compute"]
+    assert b["comm"] > a["comm"]
+
+
+def test_epoch_cost_components_positive():
+    ps, os_ = _stores()
+    est = epoch_estimate(W, "hier", Config(32, 4096), 1024, ps, os_,
+                         samples=50_000)
+    assert est.lambda_usd > 0 and est.store_usd > 0
+    assert est.wall_s > 0 and est.iters == 49 or est.iters == 50
+
+
+def test_atari_extra_upload_slows_comm():
+    """Fig. 7(d-f): the RL workload's simulation data inflates uploads."""
+    ps, os_ = _stores()
+    rl = WORKLOADS["atari-rl"]
+    no_extra = comm_breakdown("hier", rl.grad_bytes, 32, 4096, ps, os_)
+    extra = comm_breakdown("hier", rl.grad_bytes, 32, 4096, ps, os_,
+                           extra_upload_bytes=rl.extra_upload_bytes)
+    assert sum(extra.values()) > sum(no_extra.values())
+
+
+def test_vm_baseline_costs():
+    wall, usd = vm_epoch_estimate(W, VM_TYPES["c5.4xlarge"], 8, 1024,
+                                  samples=50_000)
+    assert wall > 0 and usd > 0
+
+
+@given(mem=st.integers(128, 10240))
+@settings(max_examples=20, deadline=None)
+def test_lambda_billing_monotone_in_memory(mem):
+    ps, os_ = _stores()
+    e1 = epoch_estimate(W, "hier", Config(16, mem), 1024, ps, os_,
+                        samples=20_000)
+    e2 = epoch_estimate(W, "hier", Config(16, min(mem * 2, 10_240)), 1024,
+                        ps, os_, samples=20_000)
+    # doubling memory at fixed workers never doubles cost savings for free:
+    # wall time drops (more cpu) but $/s rises
+    assert e2.wall_s <= e1.wall_s + 1e-9

@@ -1,0 +1,107 @@
+"""Fault-tolerance properties of the task scheduler (paper Section 4.1)."""
+import numpy as np
+import pytest
+
+from repro.core import Config, ConfigSpace, EpochPlan, Goal, TaskScheduler
+from repro.serverless import (WORKLOADS, ObjectStore, ParamStore,
+                              ServerlessPlatform)
+
+W = WORKLOADS["resnet18"]
+
+
+def run_with_failures(rate, seed=0):
+    plat = ServerlessPlatform(failure_rate=rate, seed=seed)
+    sched = TaskScheduler(plat, ObjectStore(), ParamStore(), seed=seed,
+                          space=ConfigSpace(max_workers=64))
+    plans = [EpochPlan(512, W, samples=30_000) for _ in range(3)]
+    return sched.run(plans, Goal("min_time"), adaptive=False,
+                     fixed_config=Config(workers=16, memory_mb=3072))
+
+
+def test_training_completes_under_heavy_failures():
+    res = run_with_failures(0.20)
+    assert res.epochs_done == 3
+    assert sum(e.failures for e in res.events) > 0
+
+
+def test_cost_and_time_grow_with_failure_rate():
+    walls, costs = [], []
+    for rate in (0.0, 0.05, 0.25):
+        r = run_with_failures(rate, seed=1)
+        walls.append(r.wall_s)
+        costs.append(r.total_cost)
+    assert walls[0] < walls[1] < walls[2]
+    assert costs[0] < costs[1] < costs[2]
+
+
+def test_restart_overhead_vs_duration_cap():
+    """Shorter duration caps -> more restarts -> strictly more wall time."""
+    from repro.core.cost_model import epoch_estimate
+    cfg = Config(workers=8, memory_mb=2048)
+    long_cap = epoch_estimate(WORKLOADS["bert-medium"], "hier", cfg, 512,
+                              ParamStore(), ObjectStore(), samples=100_000,
+                              max_duration_s=900.0)
+    short_cap = epoch_estimate(WORKLOADS["bert-medium"], "hier", cfg, 512,
+                               ParamStore(), ObjectStore(), samples=100_000,
+                               max_duration_s=120.0)
+    assert short_cap.restarts_per_worker > long_cap.restarts_per_worker
+    assert short_cap.wall_s > long_cap.wall_s
+
+
+def test_checkpoint_restart_resumes_training_exactly():
+    """The full duration-cap path: train, checkpoint, 'die', restore into a
+    fresh process-equivalent, continue — must equal uninterrupted run."""
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint import CheckpointMeta, DiskCheckpointer
+    from repro.configs import ARCHS, reduced, reduced_batch
+    from repro.data import DataConfig, IteratorState, ShardedLoader, TokenDataset
+    from repro.models import registry
+    from repro.optim import AdamW
+    import tempfile
+
+    cfg = reduced(ARCHS["olmo-1b"]).replace(n_layers=1, d_model=64)
+    opt = AdamW(lr=1e-2)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=16)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, g = jax.value_and_grad(
+            lambda p: registry.loss_fn(p, cfg, batch))(params)
+        params, opt_state = opt.update(g, opt_state, params)
+        return params, opt_state, loss
+
+    def fresh():
+        params = registry.init(jax.random.key(0), cfg)
+        return params, opt.init(params), ShardedLoader(TokenDataset(data))
+
+    # uninterrupted
+    p, o, loader = fresh()
+    losses_a = []
+    for i in range(6):
+        b = {k: jnp.asarray(v) for k, v in loader.next_batch(4).items()}
+        p, o, loss = step(p, o, b)
+        losses_a.append(float(loss))
+
+    # interrupted at step 3
+    with tempfile.TemporaryDirectory() as d:
+        ck = DiskCheckpointer(d)
+        p, o, loader = fresh()
+        losses_b = []
+        for i in range(3):
+            b = {k: jnp.asarray(v) for k, v in loader.next_batch(4).items()}
+            p, o, loss = step(p, o, b)
+            losses_b.append(float(loss))
+        ck.save("w", {"p": p, "o": o},
+                CheckpointMeta(step=3, epoch=loader.state.epoch,
+                               index=loader.state.index))
+        restored, meta = ck.restore("w", {"p": p, "o": o})
+        p2, o2 = restored["p"], restored["o"]
+        loader2 = ShardedLoader(TokenDataset(data),
+                                IteratorState(meta.epoch, meta.index))
+        for i in range(3):
+            b = {k: jnp.asarray(v) for k, v in loader2.next_batch(4).items()}
+            p2, o2, loss = step(p2, o2, b)
+            losses_b.append(float(loss))
+
+    np.testing.assert_allclose(losses_a, losses_b, rtol=1e-5)

@@ -1,0 +1,124 @@
+"""Hierarchical synchronization tests.
+
+Semantic checks that need >1 device run in a subprocess with 8 host
+devices (see spmd_checks.py); single-process tests cover the shard math
+of the LocalWorkerPool (real payloads through the simulated param store).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serverless import LocalWorkerPool, ParamStore
+from repro.serverless.worker import (flatten_grads, join_shards, make_shards,
+                                     unflatten_grads)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_check(name):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "spmd_checks.py"), name],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert f"OK {name}" in out.stdout
+
+
+@pytest.mark.slow
+def test_sync_equivalence_8dev():
+    """allreduce/hier/hier2/ps all equal the full-batch gradient on a real
+    8-device mesh (1-axis and pod x data)."""
+    _run_check("sync_equivalence")
+
+
+@pytest.mark.slow
+def test_sync_property_8dev():
+    """Hierarchical RS+AG is an exact mean for random leaf shapes (incl.
+    sizes not divisible by the worker count — padding path)."""
+    _run_check("sync_property")
+
+
+@pytest.mark.slow
+def test_elastic_rescale_8dev():
+    """Elastic fleet rescaling mid-training is numerically invisible."""
+    _run_check("elastic")
+
+
+@pytest.mark.slow
+def test_hier2_q_compressed_cross_pod_8dev():
+    """bf16-compressed cross-pod hop stays within bf16 error of exact."""
+    _run_check("hier2_q")
+
+
+# ---------------------------------------------------------------------------
+# shard math (paper Fig. 5) — property-based
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.integers(1, 12), size=st.integers(1, 500))
+@settings(max_examples=40, deadline=None)
+def test_shard_roundtrip(n, size):
+    rng = np.random.RandomState(size * 131 + n)
+    flat = rng.randn(size).astype(np.float32)
+    shards = make_shards(flat, n)
+    assert len(shards) == n
+    assert len({s.shape for s in shards}) == 1  # equal-sized (paper: m equal)
+    back = join_shards(shards, size)
+    np.testing.assert_array_equal(back, flat)
+
+
+@given(seed=st.integers(0, 100), n_workers=st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=15, deadline=None)
+def test_local_pool_equals_fullbatch(seed, n_workers):
+    """The Figure-5 dataflow through the param store == full-batch grad."""
+    rng = np.random.RandomState(seed)
+    params = {"w": jnp.array(rng.randn(4, 3), jnp.float32),
+              "b": jnp.array(rng.randn(3), jnp.float32)}
+    batch = {"x": jnp.array(rng.randn(8 * n_workers, 4), jnp.float32),
+             "y": jnp.array(rng.randn(8 * n_workers, 3), jnp.float32)}
+
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+
+    pool = LocalWorkerPool(lambda p, b: jax.grad(loss)(p, b), n_workers,
+                           ParamStore())
+    g = pool.step(params, batch)
+    ref = jax.grad(loss)(params, batch)
+    for a, b_ in zip(jax.tree.leaves(g), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_local_pool_kernel_aggregation():
+    """Fig-5 step 3 through the Pallas hier_agg kernel == numpy path."""
+    rng = np.random.RandomState(3)
+    params = {"w": jnp.array(rng.randn(6, 5), jnp.float32)}
+    batch = {"x": jnp.array(rng.randn(16, 6), jnp.float32),
+             "y": jnp.array(rng.randn(16, 5), jnp.float32)}
+
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+
+    gf = lambda p, b: jax.grad(loss)(p, b)
+    g_np = LocalWorkerPool(gf, 4, ParamStore()).step(params, batch)
+    g_k = LocalWorkerPool(gf, 4, ParamStore(),
+                          use_kernel=True).step(params, batch)
+    for a, b_ in zip(jax.tree.leaves(g_np), jax.tree.leaves(g_k)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_flatten_unflatten_roundtrip():
+    tree = {"a": jnp.ones((3, 4)), "b": {"c": jnp.arange(5.0)}}
+    flat = flatten_grads(tree)
+    back = unflatten_grads(flat, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

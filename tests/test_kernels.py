@@ -1,0 +1,128 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose against the
+pure-jnp oracles in repro.kernels.ref (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.RandomState(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# hier_agg
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_workers", [1, 2, 8, 17])
+@pytest.mark.parametrize("length", [128, 1000, 8192, 20000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_aggregate_shards(n_workers, length, dtype):
+    x = jnp.array(RNG.randn(n_workers, length), dtype)
+    got = ops.aggregate_shards(x, block=1024)
+    want = ref.ref_aggregate(x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("length", [512, 5000])
+def test_aggregate_and_apply(length):
+    x = jnp.array(RNG.randn(4, length), jnp.float32)
+    p = jnp.array(RNG.randn(length), jnp.float32)
+    got = ops.aggregate_and_apply(x, p, lr=0.05, block=512)
+    want = ref.ref_aggregate_apply(x, p, 0.05)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seq,block", [(128, 64), (160, 64), (256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_causal(seq, block, dtype):
+    b, h, d = 2, 3, 64
+    q = jnp.array(RNG.randn(b, h, seq, d), dtype)
+    k = jnp.array(RNG.randn(b, h, seq, d), dtype)
+    v = jnp.array(RNG.randn(b, h, seq, d), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=block,
+                              block_k=block)
+    want = ref.ref_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [16, 64, 100])
+def test_flash_sliding_window(window):
+    b, h, seq, d = 1, 2, 192, 32
+    q = jnp.array(RNG.randn(b, h, seq, d), jnp.float32)
+    k = jnp.array(RNG.randn(b, h, seq, d), jnp.float32)
+    v = jnp.array(RNG.randn(b, h, seq, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64)
+    want = ref.ref_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_flash_matches_model_blockwise():
+    """The model-side jnp blockwise attention and the Pallas kernel agree."""
+    from repro.models.layers import blockwise_attention
+    b, h, seq, d = 2, 2, 128, 32
+    q = jnp.array(RNG.randn(b, h, seq, d), jnp.float32)
+    k = jnp.array(RNG.randn(b, h, seq, d), jnp.float32)
+    v = jnp.array(RNG.randn(b, h, seq, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    # model layout is (b, s, h, d)
+    want = blockwise_attention(q.transpose(0, 2, 1, 3),
+                               k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3),
+                               causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+
+def _ssd_inputs(b, s, h, p, n, dtype=jnp.float32):
+    x = jnp.array(RNG.randn(b, s, h, p), dtype)
+    dt = jnp.array(np.abs(RNG.randn(b, s, h)) * 0.5 + 0.01, dtype)
+    A = -jnp.array(np.abs(RNG.randn(h)) + 0.5, jnp.float32)
+    B = jnp.array(RNG.randn(b, s, n), dtype)
+    C = jnp.array(RNG.randn(b, s, n), dtype)
+    D = jnp.array(RNG.randn(h), jnp.float32)
+    return x, dt, A, B, C, D
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (100, 32), (256, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan(s, chunk, dtype):
+    x, dt, A, B, C, D = _ssd_inputs(2, s, 4, 16, 8, dtype)
+    y, S = ops.ssd_scan(x, dt, A, B, C, D, chunk=chunk)
+    yr, Sr = ref.ref_ssd(x, dt, A, B, C, D)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(Sr),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 2e-4,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 2e-4)
+
+
+def test_ssd_kernel_matches_model_chunked():
+    from repro.models.mamba2 import ssd_chunked
+    x, dt, A, B, C, D = _ssd_inputs(1, 96, 2, 8, 4)
+    y, S = ops.ssd_scan(x, dt, A, B, C, D, chunk=32)
+    y2, S2 = ssd_chunked(x, dt, A, B, C, D, 32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S2),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,126 @@
+"""Model-layer numerics: property-based checks of the blockwise/chunked
+forms against naive references, vocab-padding handling, rope invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.models import layers as L
+from repro.models.base import ModelConfig
+from repro.models.mamba2 import ssd_chunked
+
+
+@given(seq=st.integers(4, 96), qb=st.sampled_from([4, 16, 64]),
+       window=st.sampled_from([0, 8, 32]))
+@settings(max_examples=20, deadline=None)
+def test_blockwise_attention_property(seq, qb, window):
+    rng = np.random.RandomState(seq * 7 + qb)
+    b, h, d = 1, 2, 16
+    q = jnp.array(rng.randn(b, seq, h, d), jnp.float32)
+    k = jnp.array(rng.randn(b, seq, h, d), jnp.float32)
+    v = jnp.array(rng.randn(b, seq, h, d), jnp.float32)
+    got = L.blockwise_attention(q, k, v, causal=True, sliding_window=window,
+                                q_block=qb)
+    want = ref.ref_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=True,
+                             window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+@given(s=st.integers(8, 80), chunk=st.sampled_from([8, 16, 32]))
+@settings(max_examples=15, deadline=None)
+def test_ssd_chunked_equals_sequential(s, chunk):
+    rng = np.random.RandomState(s * 13 + chunk)
+    b, h, p, n = 1, 2, 8, 4
+    x = jnp.array(rng.randn(b, s, h, p), jnp.float32)
+    dt = jnp.array(np.abs(rng.randn(b, s, h)) * 0.4 + 0.01, jnp.float32)
+    A = -jnp.array(np.abs(rng.randn(h)) + 0.3, jnp.float32)
+    B = jnp.array(rng.randn(b, s, n), jnp.float32)
+    C = jnp.array(rng.randn(b, s, n), jnp.float32)
+    D = jnp.array(rng.randn(h), jnp.float32)
+    y, S = ssd_chunked(x, dt, A, B, C, D, chunk)
+    yr, Sr = ref.ref_ssd(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(Sr),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_state_continuation():
+    """Splitting a sequence and carrying the state == processing it whole."""
+    rng = np.random.RandomState(0)
+    b, s, h, p, n = 1, 64, 2, 8, 4
+    x = jnp.array(rng.randn(b, s, h, p), jnp.float32)
+    dt = jnp.array(np.abs(rng.randn(b, s, h)) * 0.4, jnp.float32)
+    A = -jnp.array(np.abs(rng.randn(h)) + 0.3, jnp.float32)
+    B = jnp.array(rng.randn(b, s, n), jnp.float32)
+    C = jnp.array(rng.randn(b, s, n), jnp.float32)
+    D = jnp.zeros(h, jnp.float32)
+    y_full, S_full = ssd_chunked(x, dt, A, B, C, D, 16)
+    h1 = 32
+    y1, S1 = ssd_chunked(x[:, :h1], dt[:, :h1], A, B[:, :h1], C[:, :h1], D, 16)
+    y2, S2 = ssd_chunked(x[:, h1:], dt[:, h1:], A, B[:, h1:], C[:, h1:], D, 16,
+                         initial_state=S1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S2), np.asarray(S_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cross_entropy_ignores_vocab_padding():
+    cfg = ModelConfig(vocab_size=500)
+    rng = np.random.RandomState(0)
+    logits_core = jnp.array(rng.randn(2, 8, 500), jnp.float32)
+    # padded columns filled with huge values must not change the loss
+    pad = jnp.full((2, 8, cfg.vocab_padded - 500), 50.0)
+    logits_padded = jnp.concatenate([logits_core, pad], axis=-1)
+    labels = jnp.array(rng.randint(0, 500, (2, 8)), jnp.int32)
+    a = L.cross_entropy(logits_padded, labels, cfg)
+    cfg_exact = ModelConfig(vocab_size=500)
+    b = L.cross_entropy(
+        jnp.concatenate([logits_core,
+                         jnp.full((2, 8, cfg.vocab_padded - 500), -1e30)],
+                        axis=-1), labels, cfg_exact)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-6)
+
+
+def test_cross_entropy_masks_negative_labels():
+    cfg = ModelConfig(vocab_size=100)
+    logits = jnp.zeros((1, 4, cfg.vocab_padded))
+    labels = jnp.array([[5, -1, -1, 7]], jnp.int32)
+    loss = L.cross_entropy(logits, labels, cfg)
+    want = np.log(100.0)  # uniform over true vocab
+    np.testing.assert_allclose(float(loss), want, rtol=1e-5)
+
+
+def test_rope_relative_position_invariance():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    rng = np.random.RandomState(0)
+    q = jnp.array(rng.randn(1, 1, 1, 32), jnp.float32)
+    k = jnp.array(rng.randn(1, 1, 1, 32), jnp.float32)
+
+    def dot_at(i, j):
+        qi = L.apply_rope(q, jnp.array([i]), 10_000.0)
+        kj = L.apply_rope(k, jnp.array([j]), 10_000.0)
+        return float(jnp.sum(qi * kj))
+
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(105, 103), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(0, 0), dot_at(77, 77), rtol=1e-4)
+
+
+def test_causal_conv_state_continuation():
+    from repro.models.mamba2 import causal_conv
+    rng = np.random.RandomState(1)
+    x = jnp.array(rng.randn(2, 20, 6), jnp.float32)
+    w = jnp.array(rng.randn(4, 6), jnp.float32)
+    y_full, st_full = causal_conv(x, w)
+    y1, st1 = causal_conv(x[:, :11], w)
+    y2, st2 = causal_conv(x[:, 11:], w, state=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               rtol=1e-5)

@@ -1,0 +1,86 @@
+"""End-to-end behaviour tests for the SMLT system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced, reduced_batch
+from repro.core import Config, ConfigSpace, EpochPlan, Goal, TaskScheduler
+from repro.models import registry
+from repro.optim import apply_sgd
+from repro.serverless import (WORKLOADS, LocalWorkerPool, ObjectStore,
+                              ParamStore, ServerlessPlatform)
+
+
+def test_semantic_smlt_trains_real_model():
+    """A real (reduced olmo) model trained by n logical serverless workers
+    synchronizing through the param store: loss decreases AND the training
+    path is exactly the single-worker full-batch path."""
+    cfg = reduced(ARCHS["olmo-1b"]).replace(n_layers=1, d_model=64)
+    batch = reduced_batch(cfg, batch=8, seq=16)
+    params0 = registry.init(jax.random.key(0), cfg)
+
+    grad_fn = jax.jit(lambda p, b: jax.grad(
+        lambda q: registry.loss_fn(q, cfg, b))(p))
+    loss_fn = jax.jit(lambda p, b: registry.loss_fn(p, cfg, b))
+
+    def run(n_workers, steps=5, lr=0.1):
+        pool = LocalWorkerPool(grad_fn, n_workers, ParamStore())
+        p = params0
+        losses = []
+        for _ in range(steps):
+            losses.append(float(loss_fn(p, batch)))
+            g = pool.step(p, batch)
+            p = apply_sgd(p, g, lr)
+        return losses
+
+    l4 = run(4)
+    l1 = run(1)
+    assert l4[-1] < l4[0], "loss must decrease"
+    np.testing.assert_allclose(l4, l1, rtol=1e-4)
+
+
+def test_dynamic_batching_throughput_recovers():
+    """Fig. 12 shape: throughput dips are corrected after re-optimization
+    when batch size quadruples mid-run."""
+    plat = ServerlessPlatform()
+    sched = TaskScheduler(plat, ObjectStore(), ParamStore(),
+                          space=ConfigSpace(max_workers=150), seed=0)
+    w = WORKLOADS["resnet50"]
+    batches = [256] * 2 + [2048] * 3
+    res = sched.run([EpochPlan(b, w, samples=40_000) for b in batches],
+                    Goal("min_time"))
+    eps = [e for e in res.events if e.kind == "epoch"]
+    assert len(eps) == 5
+    # workers were re-chosen when batch grew
+    assert len({(e.workers, e.memory_mb) for e in eps}) >= 2
+    # larger batch -> higher samples/s after adaptation
+    assert eps[-1].throughput > eps[0].throughput
+
+
+def test_end_to_end_cost_accounting_consistent():
+    """Ledger components (lambda + stores + profiling) are all accounted."""
+    plat = ServerlessPlatform()
+    ps, os_ = ParamStore(), ObjectStore()
+    sched = TaskScheduler(plat, os_, ps, seed=1,
+                          space=ConfigSpace(max_workers=64))
+    res = sched.run([EpochPlan(512, WORKLOADS["resnet18"], samples=30_000)],
+                    Goal("min_cost"))
+    assert res.total_cost == pytest.approx(res.cost_usd + res.profile_usd)
+    assert res.cost_usd > 0
+    assert ps.alive_seconds > 0              # param store billed during sync
+    assert plat.ledger.gb_seconds > 0        # lambda GB-s accrued
+
+
+def test_scheduler_is_deterministic():
+    def run():
+        sched = TaskScheduler(ServerlessPlatform(seed=7), ObjectStore(),
+                              ParamStore(), seed=7,
+                              space=ConfigSpace(max_workers=80))
+        return sched.run([EpochPlan(1024, WORKLOADS["bert-small"],
+                                    samples=20_000)] * 2, Goal("min_time"))
+
+    a, b = run(), run()
+    assert a.wall_s == b.wall_s and a.total_cost == b.total_cost
+    assert [c.workers for c in a.config_history] == \
+           [c.workers for c in b.config_history]
