@@ -1,21 +1,35 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Dict, List
 
 from repro.core import Config, ConfigSpace, EpochPlan, Goal, TaskScheduler
 from repro.serverless import ObjectStore, ParamStore, ServerlessPlatform
 
+OUT_DIR = "experiments/bench"
+
 
 def fresh_scheduler(scheme: str = "hier", seed: int = 0, max_workers: int = 200,
-                    failure_rate: float = 0.0):
+                    failure_rate: float = 0.0, **scheduler_kw):
     plat = ServerlessPlatform(failure_rate=failure_rate, seed=seed)
     os_, ps = ObjectStore(), ParamStore()
     sched = TaskScheduler(plat, os_, ps, scheme=scheme,
                           space=ConfigSpace(max_workers=max_workers),
-                          seed=seed)
+                          seed=seed, **scheduler_kw)
     return sched, plat, os_, ps
+
+
+def emit_json(name: str, rows: List[Dict]) -> str:
+    """Write a benchmark's detailed rows to experiments/bench/<name>.json
+    (the same location benchmarks.run uses) and return the path."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    return path
 
 
 def fmt_row(name: str, us_per_call: float, derived: str) -> str:

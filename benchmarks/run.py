@@ -10,15 +10,15 @@ experiments/bench/<name>.json.
 """
 from __future__ import annotations
 
-import json
-import os
 import sys
 import time
 
-from benchmarks import (comm_breakdown, comm_scaling, config_sensitivity,
-                        dynamic_batching, kernels_bench, nas_adaptation,
-                        online_learning, optimizer_compare, roofline,
-                        scenarios, serving_slo, shard_ablation)
+from benchmarks.common import emit_json
+from benchmarks import (async_staleness, comm_breakdown, comm_scaling,
+                        config_sensitivity, dynamic_batching, kernels_bench,
+                        nas_adaptation, online_learning, optimizer_compare,
+                        roofline, scenarios, serving_slo, shard_ablation,
+                        straggler_tail)
 
 BENCHES = {
     "fig1_2_8_comm_scaling": comm_scaling,
@@ -31,16 +31,14 @@ BENCHES = {
     "fig13_nas": nas_adaptation,
     "footnote4_shard_ablation": shard_ablation,
     "serving_slo_batching": serving_slo,
+    "event_straggler_tail": straggler_tail,
+    "event_async_staleness": async_staleness,
     "kernels": kernels_bench,
     "roofline": roofline,
 }
 
-OUT_DIR = "experiments/bench"
-
-
 def main() -> None:
     which = sys.argv[1:] or list(BENCHES)
-    os.makedirs(OUT_DIR, exist_ok=True)
     print("name,us_per_call,derived")
     roofline_rows = None
     for name in which:
@@ -51,8 +49,7 @@ def main() -> None:
         us = (time.perf_counter() - t0) * 1e6
         derived = mod.summarize(rows) if hasattr(mod, "summarize") else ""
         print(f"{name},{us:.0f},\"{derived}\"", flush=True)
-        with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
-            json.dump(rows, f, indent=1, default=str)
+        emit_json(name, rows)
         if mod is roofline:
             roofline_rows = rows
     if roofline_rows is not None:

@@ -1,0 +1,77 @@
+"""Straggler tail latency: hier vs ps on the event engine.
+
+The analytic model cannot express stragglers at all — every worker takes
+exactly the mean iteration time. The event engine samples a per-(worker,
+iteration) lognormal compute multiplier (mean 1) and lets the barriers do
+their damage: a BSP iteration ends when the *slowest* worker's DL-grad
+lands, so the per-iteration distribution grows a tail as sigma grows.
+
+The comparison the paper's Fig. 7/8 implies but can't show: hier's
+per-iteration communication is O(G) vs ps's O(n*G) download, so the same
+compute straggler costs ps strictly more wall-clock — its barrier sits at
+the end of a longer critical path.
+
+Run:  PYTHONPATH=src python -m benchmarks.straggler_tail
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serverless import WORKLOADS, EventEngine, ObjectStore, ParamStore
+from benchmarks.common import emit_json
+
+W = WORKLOADS["bert-small"]
+N_WORKERS = 32
+MEMORY_MB = 4096
+BATCH = 1024
+SAMPLES = 40_000          # ~40 iterations
+SIGMAS = (0.0, 0.2, 0.4, 0.6)
+SCHEMES = ("hier", "ps")
+
+
+def _iteration_durations(iter_times):
+    # drop the first completion: it includes cold start + data fetch
+    return np.diff(np.asarray(iter_times))
+
+
+def run() -> list:
+    rows = []
+    for sigma in SIGMAS:
+        for scheme in SCHEMES:
+            res = EventEngine(W, scheme, N_WORKERS, MEMORY_MB, BATCH,
+                              ParamStore(), ObjectStore(), samples=SAMPLES,
+                              straggler_sigma=sigma, seed=0,
+                              trace_enabled=False).run()
+            d = _iteration_durations(res.iter_times)
+            rows.append({
+                "figure": "straggler_tail", "scheme": scheme, "sigma": sigma,
+                "wall_s": round(res.wall_s, 2),
+                "cost_usd": round(res.cost_usd, 4),
+                "iters": res.iters_done,
+                "it_p50_s": round(float(np.percentile(d, 50)), 3),
+                "it_p95_s": round(float(np.percentile(d, 95)), 3),
+                "it_p99_s": round(float(np.percentile(d, 99)), 3),
+                "tail_amplification": round(
+                    float(np.percentile(d, 99) / np.percentile(d, 50)), 3),
+            })
+    return rows
+
+
+def summarize(rows) -> str:
+    hi = max(SIGMAS)
+    at = {r["scheme"]: r for r in rows if r["sigma"] == hi}
+    base = {r["scheme"]: r for r in rows if r["sigma"] == 0.0}
+    h, p = at["hier"], at["ps"]
+    return (f"sigma={hi}: hier p99 {h['it_p99_s']}s vs ps {p['it_p99_s']}s "
+            f"({p['it_p99_s'] / h['it_p99_s']:.1f}x); wall {h['wall_s']:.0f}s"
+            f" vs {p['wall_s']:.0f}s; straggler cost vs sigma=0: hier "
+            f"+{h['wall_s'] / base['hier']['wall_s'] - 1:.0%}, ps "
+            f"+{p['wall_s'] / base['ps']['wall_s'] - 1:.0%}")
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print(summarize(rows))
+    print("json:", emit_json("event_straggler_tail", rows))

@@ -11,6 +11,12 @@ Default is a ~28M-param model sized for a CPU container; ``--model-dim`` /
 ``--layers`` scale it up (a 100M run is ~d_model 768 x 12L; on TPU use
 ``repro.launch.train`` with a full config).
 
+After training, the run is projected onto the serverless platform: the
+trained model becomes a calibrated ``Workload`` and one epoch executes on
+the discrete-event engine (``repro.serverless.events``) under bsp and
+async sync, with lognormal stragglers — what this exact job would cost
+and how long it would take on Lambda. ``--skip-serverless-sim`` disables.
+
 Run:  PYTHONPATH=src python examples/train_e2e.py --steps 300
 """
 import argparse
@@ -27,6 +33,27 @@ from repro.launch.steps import make_train_step
 from repro.models import registry
 from repro.models.base import ModelConfig
 from repro.optim import AdamW, warmup_cosine
+from repro.serverless import EventEngine, ObjectStore, ParamStore, Workload
+
+
+def serverless_projection(cfg, seq_len: int, batch: int, steps: int):
+    """Replay this training job on the event engine: hier sync, 16 Lambda
+    workers, bsp vs async under mild stragglers."""
+    params = registry.param_count(cfg)
+    w = Workload(name=cfg.arch_id, param_count=params,
+                 flops_per_sample=6.0 * params * seq_len,   # fwd+bwd decoder
+                 sample_bytes=4.0 * seq_len,
+                 dataset_samples=batch * steps)
+    n, mem = 16, 4096
+    print(f"serverless projection ({n} workers x {mem}MB, hier):")
+    for mode in ("bsp", "async"):
+        res = EventEngine(w, "hier", n, mem, batch * n, ParamStore(),
+                          ObjectStore(), sync_mode=mode,
+                          straggler_sigma=0.3, seed=0,
+                          trace_enabled=False).run()
+        print(f"  {mode:5s}: {res.iters_done} iters, wall {res.wall_s:.0f}s, "
+              f"${res.cost_usd:.3f}, {res.invocations} invocations, "
+              f"{res.restarts} cap-restarts")
 
 
 def main():
@@ -39,6 +66,7 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="/tmp/smlt_e2e_ckpt")
+    ap.add_argument("--skip-serverless-sim", action="store_true")
     args = ap.parse_args()
 
     cfg = ModelConfig(arch_id="e2e-lm", family="dense",
@@ -91,6 +119,8 @@ def main():
     print(f"loss: {losses[0]:.3f} -> {min(losses):.3f} "
           f"({time.time()-t0:.0f}s total)")
     assert min(losses) < losses[0] - 0.5, "training must clearly progress"
+    if not args.skip_serverless_sim:
+        serverless_projection(cfg, args.seq, batch_size, args.steps)
 
 
 if __name__ == "__main__":

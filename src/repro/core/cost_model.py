@@ -11,13 +11,11 @@ import math
 from typing import Dict, Optional
 
 from repro.core.bayes_opt import Config
-from repro.serverless.platform import (LAMBDA_GB_SECOND, LAMBDA_PER_REQUEST,
-                                       LAMBDA_MAX_DURATION_S)
+from repro.serverless.platform import (  # noqa: F401  (re-exported names)
+    CHECKPOINT_RESTORE_S, DATA_OBJECT_BYTES, LAMBDA_GB_SECOND,
+    LAMBDA_MAX_DURATION_S, LAMBDA_PER_REQUEST)
 from repro.serverless.stores import ObjectStore, ParamStore
 from repro.serverless.worker import Workload, iteration_time
-
-CHECKPOINT_RESTORE_S = 1.5       # restore model + iterator state on restart
-DATA_OBJECT_BYTES = 250e6        # paper: dataset split into <=250MB objects
 
 
 @dataclasses.dataclass

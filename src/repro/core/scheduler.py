@@ -18,6 +18,8 @@ import numpy as np
 from repro.core.bayes_opt import BayesianOptimizer, Config, ConfigSpace
 from repro.core.constraints import Goal
 from repro.core.cost_model import epoch_estimate, profile_cost
+from repro.core.monitor import ThroughputMonitor
+from repro.serverless.events import EventEngine
 from repro.serverless.platform import ServerlessPlatform
 from repro.serverless.stores import ObjectStore, ParamStore
 from repro.serverless.worker import Workload
@@ -42,7 +44,7 @@ class TraceEvent:
     batch_size: int = 0
     model_params: int = 0
     cost_cum: float = 0.0
-    restarts: int = 0
+    restarts: int = 0                  # duration-cap restarts, per worker
     failures: int = 0
 
 
@@ -67,7 +69,10 @@ class TaskScheduler:
                  space: Optional[ConfigSpace] = None, scheme: str = "hier",
                  profile_iters: int = 3, framework_init_s: float = 4.0,
                  cold_start_s: float = 2.0, seed: int = 0,
-                 probe_cap_s: float = 180.0, bo_max_iters: int = 12):
+                 probe_cap_s: float = 180.0, bo_max_iters: int = 12,
+                 engine: str = "analytic",
+                 engine_opts: Optional[Dict] = None,
+                 mid_epoch_adapt: bool = True):
         self.platform = platform
         self.object_store = object_store
         self.param_store = param_store
@@ -81,6 +86,16 @@ class TaskScheduler:
         # the resource manager never lets a bad config burn real money
         self.probe_cap_s = probe_cap_s
         self.bo_max_iters = bo_max_iters
+        # "analytic": closed-form epoch_estimate (fast path; BO probes
+        # always use it). "event": epochs execute on the discrete-event
+        # engine (stragglers, failures, sync modes via ``engine_opts``),
+        # and per-iteration completions feed a ThroughputMonitor that can
+        # abort + re-optimize *mid-epoch* when throughput drifts.
+        if engine not in ("analytic", "event"):
+            raise ValueError(engine)
+        self.engine = engine
+        self.engine_opts = dict(engine_opts or {})
+        self.mid_epoch_adapt = mid_epoch_adapt
 
     def _space_for(self, w: Workload) -> ConfigSpace:
         """Resource-manager floor: the function must hold model + grads +
@@ -149,6 +164,75 @@ class TaskScheduler:
         useful = sum(1 for o in bo.obs) * self.profile_iters * batch
         return bo.best().config, t_prof, usd_prof, useful
 
+    # -- event-engine epoch execution ----------------------------------------
+    def _run_epoch_event(self, plan: EpochPlan, goal: Goal, config: Config,
+                         samples_left: int, epoch_i: int, n_plans: int,
+                         adaptive: bool, events: List[TraceEvent],
+                         t_base: float, cost_base: float):
+        """Execute one epoch on the discrete-event engine, in chunks: when
+        the per-iteration ThroughputMonitor detects a sustained drift, the
+        engine checkpoints and stops, we re-optimize *mid-epoch*, and the
+        remaining samples run under the new deployment."""
+        wall = cost = 0.0
+        restarts = failures = 0
+        t_prof = usd_prof = 0.0
+        configs: List[Config] = []
+        remaining = samples_left
+        attempt = 0
+        iters_epoch = 0
+        while remaining > 0:
+            monitor = ThroughputMonitor()
+
+            def on_it(g, t_now, dt, _m=monitor, _b=plan.batch_size):
+                if dt <= 0 or not (adaptive and self.mid_epoch_adapt):
+                    return False
+                return _m.observe(_b / dt)
+
+            opts = {"failure_rate": self.platform.failure_rate,
+                    **self.engine_opts}
+            # a slowdown injection is an epoch-level regression: keep its
+            # onset fixed in epoch-iteration space across restarted chunks
+            if opts.get("slowdown_at_iter") is not None:
+                opts["slowdown_at_iter"] = max(
+                    opts["slowdown_at_iter"] - iters_epoch, 0)
+            r = EventEngine(
+                plan.workload, self.scheme, config.workers, config.memory_mb,
+                plan.batch_size, self.param_store, self.object_store,
+                platform=self.platform,
+                framework_init_s=self.framework_init_s,
+                cold_start_s=self.cold_start_s,
+                max_duration_s=self.platform.max_duration_s,
+                samples=remaining, seed=self.seed + 7919 * epoch_i + attempt,
+                on_iteration=on_it, trace_enabled=False, **opts).run()
+            wall += r.wall_s
+            cost += r.cost_usd
+            # EngineResult.restarts is fleet-wide; TraceEvent.restarts is
+            # per worker (matching the analytic path's restarts_per_worker)
+            restarts += round(r.restarts / config.workers)
+            failures += r.failures
+            remaining -= max(r.samples_done, plan.batch_size)
+            iters_epoch += r.iters_done
+            attempt += 1
+            if r.stopped_early and remaining > 0 and adaptive:
+                config, pt, pu, profiled = self.optimize(
+                    plan.workload, plan.batch_size, goal,
+                    epochs_remaining=n_plans - epoch_i, samples=remaining,
+                    warm_start=config)
+                t_prof += pt
+                usd_prof += pu
+                remaining = max(remaining - profiled, 0)
+                configs.append(config)
+                events.append(TraceEvent(
+                    t_base + wall + t_prof, epoch_i, "reoptimize_mid",
+                    workers=config.workers, memory_mb=config.memory_mb,
+                    batch_size=plan.batch_size,
+                    model_params=plan.workload.param_count,
+                    cost_cum=cost_base + cost + usd_prof))
+            elif not r.stopped_early:
+                break
+        meta = {"t_prof": t_prof, "usd_prof": usd_prof, "configs": configs}
+        return wall, cost, restarts, failures, config, meta
+
     # -- main loop ------------------------------------------------------------
     def run(self, plans: List[EpochPlan], goal: Goal, *, adaptive: bool = True,
             fixed_config: Optional[Config] = None,
@@ -188,34 +272,58 @@ class TaskScheduler:
             samples_plan = plan.samples or plan.workload.dataset_samples
             samples_left = max(samples_plan - profiled_samples,
                                plan.batch_size)
-            est = epoch_estimate(
-                plan.workload, self.scheme, config, plan.batch_size,
-                self.param_store, self.object_store,
-                framework_init_s=self.framework_init_s,
-                cold_start_s=self.cold_start_s, samples=samples_left)
-            # fault injection: failed iterations are redone (Section 4.1)
-            failures = int(rng.binomial(est.iters,
-                                        self.platform.failure_rate))
-            redo_s = failures * est.it_breakdown["total"]
-            wall = est.wall_s + redo_s
-            epoch_cost = est.cost_usd * (wall / est.wall_s)
+
+            if self.engine == "event":
+                # the epoch actually executed (stores + ledger already
+                # carry its side effects); a later deadline break only
+                # drops it from the result totals
+                wall, epoch_cost, restarts, failures, config, meta = \
+                    self._run_epoch_event(plan, goal, config, samples_left,
+                                          i, len(plans), adaptive, events,
+                                          t, cost)
+                t_prof += meta["t_prof"]
+                usd_prof += meta["usd_prof"]
+                t += meta["t_prof"]
+                cost += meta["usd_prof"]
+                history.extend(meta["configs"])
+                commit = None
+            else:
+                est = epoch_estimate(
+                    plan.workload, self.scheme, config, plan.batch_size,
+                    self.param_store, self.object_store,
+                    framework_init_s=self.framework_init_s,
+                    cold_start_s=self.cold_start_s, samples=samples_left)
+                # fault injection: failed iterations are redone (Section 4.1)
+                failures = int(rng.binomial(est.iters,
+                                            self.platform.failure_rate))
+                redo_s = failures * est.it_breakdown["total"]
+                wall = est.wall_s + redo_s
+                epoch_cost = est.cost_usd * (wall / est.wall_s)
+                restarts = est.restarts_per_worker
+
+                def commit(est=est, wall=wall, config=config):
+                    self.param_store.keep_alive(est.iters
+                                                * est.it_breakdown["comm"])
+                    # Lambda semantics: every worker is a request, and every
+                    # duration-cap restart re-invokes the whole fleet
+                    self.platform.ledger.charge_fleet(
+                        config.memory_mb, config.workers, wall,
+                        invocations_per_worker=est.restarts_per_worker + 1)
 
             if (stop_at_deadline and goal.deadline_s is not None
                     and t + wall > goal.deadline_s):
                 break
+            if commit is not None:
+                commit()      # deadline-skipped epochs are never billed
             t += wall
             cost += epoch_cost
-            self.param_store.keep_alive(est.iters
-                                        * est.it_breakdown["comm"])
-            self.platform.ledger.charge_fn(
-                config.memory_mb * config.workers, wall)
             epochs_done += 1
             events.append(TraceEvent(
                 t, i, "epoch", throughput=samples_left / wall,
                 workers=config.workers, memory_mb=config.memory_mb,
                 batch_size=plan.batch_size,
                 model_params=plan.workload.param_count, cost_cum=cost,
-                restarts=est.restarts_per_worker, failures=failures))
+                restarts=restarts, failures=failures))
 
         return RunResult(events=events, wall_s=t, cost_usd=cost - usd_prof,
                          profile_s=t_prof, profile_usd=usd_prof,

@@ -1,4 +1,6 @@
+from repro.serverless.events import EngineResult, EventEngine  # noqa: F401
 from repro.serverless.platform import BillingLedger, ServerlessPlatform  # noqa: F401
-from repro.serverless.stores import ObjectStore, ParamStore  # noqa: F401
+from repro.serverless.stores import ObjectStore, ParamStore, SharedLink  # noqa: F401
 from repro.serverless.worker import (  # noqa: F401
-    WORKLOADS, LocalWorkerPool, Workload, comm_breakdown, iteration_time)
+    WORKLOADS, CommPhase, LocalWorkerPool, Workload, comm_breakdown,
+    comm_plan, iteration_time, parse_sync_mode)

@@ -1,0 +1,557 @@
+"""Discrete-event execution core for the serverless simulator.
+
+The closed-form ``epoch_estimate`` (repro.core.cost_model) costs a whole
+epoch in one expression — nothing can *happen* inside it. This engine
+replays the same epoch as a time-ordered event simulation with one state
+machine per worker::
+
+    invoke -> cold-start -> [data-fetch] -> { compute -> UL-shard ->
+        aggregate (DL-shard + UL-aggr) -> DL-grad -> step }* -> finish
+
+which makes the paper's dynamics first-class:
+
+  - **Contended stores**: transfers share store bandwidth only while they
+    actually overlap (``SharedLink`` processor sharing), instead of the
+    analytic model's static ``concurrent=n`` divisor.
+  - **Stragglers**: per-(worker, iteration) lognormal compute multipliers
+    (mean 1, so the zero-variance limit reproduces the analytic model).
+  - **Mid-flight failures**: a worker dies partway through an iteration,
+    re-invokes, restores the checkpoint from the ObjectStore, and redoes
+    the iteration — stalling its barrier peers, as it would on Lambda.
+  - **Duration caps**: each invocation may hold at most
+    ``max_duration_s - init - restore`` seconds of work; the engine
+    checkpoints through the ObjectStore and restarts mid-segment (billing
+    n requests per restart wave, per Lambda semantics).
+  - **sync_mode**: "bsp" runs the comm plan's barriers; "ssp(k)" gates a
+    worker only when it runs k iterations ahead of the slowest peer;
+    "async" removes all inter-worker waits. (``LocalWorkerPool`` carries
+    the matching stale-gradient *numerics*.)
+  - **Mid-epoch adaptation**: ``on_iteration`` observes every global
+    iteration completion; returning True checkpoints and stops the epoch
+    early so the scheduler can re-optimize *mid-epoch*.
+
+In the zero-variance, zero-failure, bsp limit the engine reproduces
+``epoch_estimate`` wall-clock and cost within 1% (tested); with any
+variance it yields the tail behavior the analytic path cannot express.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serverless.platform import (CHECKPOINT_RESTORE_S,
+                                       DATA_OBJECT_BYTES, LAMBDA_GB_SECOND,
+                                       LAMBDA_MAX_DURATION_S,
+                                       LAMBDA_PER_REQUEST, InvocationRecord,
+                                       ServerlessPlatform, fn_net_gbps)
+from repro.serverless.stores import (ECS_GB_HOUR, ECS_VCPU_HOUR, S3_GET_PER_1K,
+                                     ObjectStore, ParamStore, SharedLink)
+from repro.serverless.worker import (CommPhase, Workload, comm_plan,
+                                     compute_time, parse_sync_mode)
+
+_EPS_GB = 1e-12          # flow remainder considered complete (~1e-3 byte)
+
+
+class _Transfer:
+    """A pausable store transfer: ``requests * latency`` of setup, then a
+    flow on the link at the processor-sharing rate."""
+    _ids = itertools.count()
+
+    __slots__ = ("fid", "link", "remaining_gb", "latency_left", "cb", "token",
+                 "is_sync")
+
+    def __init__(self, link: SharedLink, nbytes: float, latency_s: float,
+                 cb: Callable[[], None], is_sync: bool):
+        self.fid = next(self._ids)
+        self.link = link
+        self.remaining_gb = nbytes / 1e9
+        self.latency_left = latency_s
+        self.cb = cb
+        self.token = 0          # invalidates scheduled setup events on pause
+        self.is_sync = is_sync  # gradient sync (param-store keep-alive window)
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """What one event-engine epoch (or partial epoch) produced."""
+    wall_s: float
+    lambda_usd: float
+    store_usd: float
+    iters_done: int              # globally completed iterations (min worker)
+    samples_done: int
+    sync_s: float                # param-link busy time (keep-alive billing)
+    restarts: int                # duration-cap restarts, fleet-wide
+    failures: int                # mid-flight failures, fleet-wide
+    invocations: int             # Lambda requests billed
+    iter_times: List[float]      # completion timestamp per global iteration
+    stopped_early: bool
+    trace: List[str]
+
+    @property
+    def cost_usd(self) -> float:
+        return self.lambda_usd + self.store_usd
+
+
+class _WorkerState:
+    __slots__ = ("wid", "rng", "it", "inv_rec", "inv_count", "cap_gen",
+                 "seg_gen", "seg_end", "activity", "pending", "restarting",
+                 "finished")
+
+    def __init__(self, wid: int, seed: int):
+        self.wid = wid
+        self.rng = np.random.RandomState((seed * 1_000_003 + wid) % 2**31)
+        self.it = 0                   # completed iterations
+        self.inv_rec: Optional[InvocationRecord] = None
+        self.inv_count = 0
+        self.cap_gen = 0              # invalidates scheduled cap events
+        self.seg_gen = 0              # invalidates scheduled compute ends
+        self.seg_end = 0.0
+        self.activity: Optional[Tuple] = None   # ("compute"|"transfer"|...)
+        self.pending = None           # continuation to run after a restart
+        self.restarting = False
+        self.finished = False
+
+
+class EventEngine:
+    """Run one epoch of ``workload`` under deployment ``(n, memory_mb)``
+    as a discrete-event simulation. See the module docstring for the
+    semantics; construction mirrors ``epoch_estimate``'s signature so the
+    two paths are interchangeable."""
+
+    def __init__(self, workload: Workload, scheme: str, n_workers: int,
+                 memory_mb: float, global_batch: int,
+                 param_store: ParamStore, object_store: ObjectStore, *,
+                 platform: Optional[ServerlessPlatform] = None,
+                 sync_mode: str = "bsp", staleness: int = 0,
+                 straggler_sigma: float = 0.0, failure_rate: float = 0.0,
+                 framework_init_s: float = 4.0, cold_start_s: float = 2.0,
+                 max_duration_s: float = LAMBDA_MAX_DURATION_S,
+                 samples: Optional[int] = None, seed: int = 0,
+                 slowdown_at_iter: Optional[int] = None,
+                 slowdown_factor: float = 1.0,
+                 on_iteration: Optional[Callable] = None,
+                 trace_enabled: bool = True):
+        self.w = workload
+        self.scheme = scheme
+        self.n = n_workers
+        self.memory_mb = memory_mb
+        self.global_batch = global_batch
+        self.param_store = param_store
+        self.object_store = object_store
+        self.platform = platform or ServerlessPlatform(
+            max_duration_s=max_duration_s, seed=seed)
+        self.mode, self.staleness = parse_sync_mode(sync_mode, staleness)
+        self.sigma = straggler_sigma
+        if not 0.0 <= failure_rate < 1.0:
+            # at 1.0 every iteration attempt fails and the simulated epoch
+            # (like the real one) would never complete
+            raise ValueError(f"failure_rate must be in [0, 1), "
+                             f"got {failure_rate}")
+        self.failure_rate = failure_rate
+        self.init_s = cold_start_s + framework_init_s
+        self.restore_s = CHECKPOINT_RESTORE_S
+        self.max_duration_s = max_duration_s
+        self.usable_s = max_duration_s - self.init_s - self.restore_s
+        if self.usable_s <= 0:
+            raise ValueError("max_duration_s leaves no usable window")
+        self.samples = samples or workload.dataset_samples
+        self.iters = max(math.ceil(self.samples / global_batch), 1)
+        self.seed = seed
+        self.slowdown_at_iter = slowdown_at_iter
+        self.slowdown_factor = slowdown_factor
+        self.on_iteration = on_iteration
+        self.trace_enabled = trace_enabled
+
+        local_batch = max(global_batch // n_workers, 1)
+        self.base_compute_s = compute_time(workload, local_batch, memory_mb)
+        self.plan: List[CommPhase] = comm_plan(
+            scheme, workload.grad_bytes, n_workers,
+            extra_upload_bytes=workload.extra_upload_bytes)
+        fn_bw = fn_net_gbps(memory_mb) * 8   # as in the analytic model
+        self.links: Dict[str, SharedLink] = {
+            "param": param_store.link(per_fn_gbps=fn_bw),
+            "object": object_store.link(),
+        }
+        self.ckpt_bytes = 12.0 * workload.param_count  # params + Adam m,v
+
+        # event queue: (time, seq, fn)
+        self.now = 0.0
+        self._q: List[Tuple[float, int, Callable]] = []
+        self._seq = itertools.count()
+        self._workers = [_WorkerState(i, seed) for i in range(n_workers)]
+        self._barriers: Dict[Tuple, Dict] = {}
+        self._gate_waiters: List[Tuple[_WorkerState, Callable]] = []
+        self._stopping = False
+        self._g_done = 0
+        self._iter_times: List[float] = []
+        self._trace: List[str] = []
+        self._gb_seconds = 0.0
+        self._requests = 0
+        self._cap_restarts = 0
+        self._failures = 0
+        # union of time any gradient-sync transfer is outstanding — the
+        # param store's keep-alive window (matches the analytic sync_s)
+        self._sync_active = 0
+        self._sync_busy = 0.0
+        self._wall = 0.0
+
+    # -- primitives ----------------------------------------------------------
+    def _at(self, t: float, fn: Callable):
+        heapq.heappush(self._q, (t, next(self._seq), fn))
+
+    def _tr(self, w: _WorkerState, what: str):
+        if self.trace_enabled:
+            self._trace.append(f"{self.now:.6f} w{w.wid} {what}")
+
+    def _reschedule(self, link: SharedLink):
+        """Flow set changed: invalidate outstanding completion predictions
+        and schedule the next one at the new processor-sharing rate."""
+        link.generation += 1
+        if not link.flows:
+            return
+        r = link.rate()
+        t_next = self.now + min(tr.remaining_gb for tr in link.flows.values()) / r
+        self._at(t_next, lambda gen=link.generation: self._link_event(link, gen))
+
+    def _link_event(self, link: SharedLink, gen: int):
+        if gen != link.generation:
+            return                               # stale prediction
+        done = [tr for tr in link.flows.values()
+                if tr.remaining_gb <= _EPS_GB]
+        for tr in done:
+            del link.flows[tr.fid]
+        self._reschedule(link)
+        for tr in done:
+            tr.cb()
+
+    def _start_transfer(self, w: _WorkerState, store: str, nbytes: float,
+                        requests: int, cont: Callable, is_sync: bool = False):
+        link = self.links[store]
+
+        def finished():
+            w.activity = None
+            if is_sync:
+                self._sync_active -= 1
+            cont()
+
+        tr = _Transfer(link, nbytes, link.latency_s * max(requests, 1),
+                       finished, is_sync)
+        if is_sync:
+            self._sync_active += 1
+        w.activity = ("transfer", tr, tr.cb)
+        self._begin_setup(w, tr)
+
+    def _begin_setup(self, w: _WorkerState, tr: _Transfer):
+        link = tr.link
+        link.setup += 1
+        tr.token += 1
+
+        def activate(token=tr.token):
+            if token != tr.token:
+                return                           # paused during setup
+            link.setup -= 1
+            tr.latency_left = 0.0
+            if tr.remaining_gb <= _EPS_GB:
+                w.activity = None
+                self._reschedule(link)           # busy-window bookkeeping
+                tr.cb()
+                return
+            link.flows[tr.fid] = tr
+            self._reschedule(link)
+
+        if tr.latency_left > 0:
+            self._at(self.now + tr.latency_left, activate)
+        else:
+            link.setup -= 1      # resume directly into the flow
+            link.flows[tr.fid] = tr
+            self._reschedule(link)
+
+    def _do_compute(self, w: _WorkerState, duration: float, cont: Callable):
+        w.activity = ("compute", cont)
+        w.seg_end = self.now + duration
+        w.seg_gen += 1
+
+        def done(gen=w.seg_gen):
+            if gen != w.seg_gen:
+                return
+            w.activity = None
+            cont()
+
+        self._at(w.seg_end, done)
+
+    # -- invocation lifecycle ------------------------------------------------
+    def _begin_invocation(self, w: _WorkerState, overhead: float,
+                          cont: Callable, resumed: bool):
+        rec = InvocationRecord(worker_id=w.wid, start=self.now,
+                               cold_start_s=self.init_s, resumed=resumed)
+        self.platform.invocations.append(rec)
+        w.inv_rec = rec
+        w.inv_count += 1
+        self._tr(w, "invoke" if not resumed else "re-invoke")
+
+        def armed():
+            # the usable window opens once init/restore completes
+            w.cap_gen += 1
+            self._at(self.now + self.usable_s,
+                     lambda gen=w.cap_gen: self._cap_fire(w, gen))
+            cont()
+
+        self._at(self.now + overhead, armed)
+
+    def _close_invocation(self, w: _WorkerState):
+        rec = w.inv_rec
+        recs = self.platform.finish(rec, self.memory_mb, self.now)
+        for r in recs:
+            self._gb_seconds += self.memory_mb / 1024.0 * (r.end - r.start)
+            self._requests += 1
+        w.inv_rec = None
+        w.cap_gen += 1                           # disarm the cap timer
+
+    def _pause_activity(self, w: _WorkerState):
+        """Capture whatever the worker is doing as a resumable pending
+        continuation (duration-cap or failure preemption)."""
+        act = w.activity
+        w.activity = None
+        if act is None:
+            return                               # waiting: barrier will defer
+        kind = act[0]
+        if kind == "compute":
+            _, cont = act
+            remaining = max(w.seg_end - self.now, 0.0)
+            w.seg_gen += 1
+            w.pending = lambda: self._do_compute(w, remaining, cont)
+        elif kind == "transfer":
+            _, tr, _cont = act
+            tr.token += 1                        # cancel pending setup
+            link = tr.link
+            if tr.fid in link.flows:             # mid-flow: keep the bytes
+                del link.flows[tr.fid]
+                self._reschedule(link)
+                tr.latency_left = 0.0
+            else:
+                link.setup -= 1
+            if tr.is_sync:
+                self._sync_active -= 1
+            w.pending = lambda: self._resume_transfer(w, tr)
+
+    def _resume_transfer(self, w: _WorkerState, tr: _Transfer):
+        if tr.is_sync:
+            self._sync_active += 1
+        w.activity = ("transfer", tr, tr.cb)
+        self._begin_setup(w, tr)
+
+    def _cap_fire(self, w: _WorkerState, gen: int):
+        if gen != w.cap_gen or w.finished or w.restarting:
+            return
+        self._cap_restarts += 1
+        self._tr(w, "cap-restart")
+        self._pause_activity(w)
+        self._close_invocation(w)
+        # checkpoint out through the object store, restore on re-invoke
+        self.object_store.put(f"ckpt/w{w.wid}", {"iter": w.it},
+                              nbytes=self.ckpt_bytes)
+        self._restart(w)
+
+    def _fail(self, w: _WorkerState, retry: Callable):
+        self._failures += 1
+        self._tr(w, "fail")
+        w.activity = None
+        w.seg_gen += 1
+        self._close_invocation(w)
+        # the dead function checkpointed nothing; the restart restores the
+        # last iteration-boundary state (kept in the object store)
+        self.object_store.put(f"ckpt/w{w.wid}", {"iter": w.it},
+                              nbytes=self.ckpt_bytes)
+        w.pending = retry
+        self._restart(w)
+
+    def _restart(self, w: _WorkerState):
+        w.restarting = True
+
+        def resume():
+            if f"ckpt/w{w.wid}" in self.object_store.blobs:
+                self.object_store.get(f"ckpt/w{w.wid}", nbytes=self.ckpt_bytes)
+            w.restarting = False
+            pending, w.pending = w.pending, None
+            if callable(pending):
+                pending()
+            # else: worker was waiting at a barrier/gate — stays waiting
+
+        self._begin_invocation(w, self.init_s + self.restore_s, resume,
+                               resumed=True)
+
+    # -- synchronization -----------------------------------------------------
+    def _barrier(self, key: Tuple, w: _WorkerState, cont: Callable):
+        if self._stopping:
+            # epoch aborted at the last completed iteration's checkpoint:
+            # the in-flight iteration is discarded, nobody else will arrive
+            return self._finish_worker(w)
+        b = self._barriers.setdefault(key, {"count": 0, "waiters": []})
+        b["count"] += 1
+        w.activity = None
+        if b["count"] >= self.n:
+            del self._barriers[key]
+            self._tr(w, f"barrier-release {key[0]}:{key[1]}")
+            for ww, wcont in b["waiters"]:
+                self._release(ww, wcont)
+            self._release(w, cont)
+        else:
+            b["waiters"].append((w, cont))
+
+    def _release(self, w: _WorkerState, cont: Callable):
+        if w.restarting:
+            w.pending = cont                     # deliver after re-invoke
+        else:
+            cont()
+
+    def _gate_ok(self, w: _WorkerState) -> bool:
+        if self.mode == "async" or self.staleness is None:
+            return True
+        lo = min(ww.it for ww in self._workers)
+        return w.it - lo <= self.staleness
+
+    def _poke_gate(self):
+        if not self._gate_waiters:
+            return
+        ready, self._gate_waiters = self._gate_waiters, []
+        for w, cont in ready:
+            if self._stopping or self._gate_ok(w):
+                self._release(w, cont)
+            else:
+                self._gate_waiters.append((w, cont))
+
+    # -- worker state machine ------------------------------------------------
+    def _start_worker(self, w: _WorkerState):
+        shard_bytes = self.w.sample_bytes * self.samples / self.n
+
+        def fetch():
+            self._tr(w, "data-fetch")
+            self._start_transfer(w, "object", shard_bytes, 1,
+                                 lambda: self._begin_iteration(w))
+
+        # cap window is armed after init; the epoch's data fetch rides
+        # before the first compute, as in the analytic model
+        self._begin_invocation(w, self.init_s, fetch, resumed=False)
+
+    def _begin_iteration(self, w: _WorkerState):
+        if self._stopping or w.it >= self.iters:
+            return self._finish_worker(w)
+        if self.mode == "ssp" and not self._gate_ok(w):
+            w.activity = None
+            self._gate_waiters.append((w, lambda: self._begin_iteration(w)))
+            return
+        self._compute_phase(w)
+
+    def _compute_phase(self, w: _WorkerState):
+        z = float(w.rng.standard_normal())
+        factor = math.exp(self.sigma * z - 0.5 * self.sigma * self.sigma)
+        if (self.slowdown_at_iter is not None
+                and w.it >= self.slowdown_at_iter):
+            factor *= self.slowdown_factor
+        d = self.base_compute_s * factor
+        fail_u = float(w.rng.random_sample())
+        if fail_u < self.failure_rate:
+            frac = float(w.rng.random_sample())
+            self._do_compute(w, d * frac,
+                             lambda: self._fail(
+                                 w, lambda: self._compute_phase(w)))
+            return
+        self._tr(w, f"compute it{w.it}")
+        self._do_compute(w, d, lambda: self._comm_phase(w, 0))
+
+    def _comm_phase(self, w: _WorkerState, pi: int):
+        if self._stopping:
+            return self._finish_worker(w)        # discard partial iteration
+        if pi >= len(self.plan):
+            return self._iteration_done(w)
+        ph = self.plan[pi]
+
+        def done():
+            if self.mode == "bsp" and ph.barrier_after:
+                self._barrier((ph.name, w.it), w,
+                              lambda: self._comm_phase(w, pi + 1))
+            else:
+                self._comm_phase(w, pi + 1)
+
+        self._start_transfer(w, ph.store, ph.nbytes, ph.requests, done,
+                             is_sync=True)
+
+    def _iteration_done(self, w: _WorkerState):
+        w.it += 1
+        self._tr(w, f"step it{w.it - 1}")
+        lo = min(ww.it for ww in self._workers)
+        while self._g_done < lo:
+            self._g_done += 1
+            prev = self._iter_times[-1] if self._iter_times else None
+            self._iter_times.append(self.now)
+            if self.on_iteration is not None:
+                dt = (self.now - prev) if prev is not None else 0.0
+                if self.on_iteration(self._g_done, self.now, dt):
+                    self._stopping = True
+                    self._tr(w, "stop-requested")
+                    self._flush_barriers()
+        self._poke_gate()
+        self._begin_iteration(w)
+
+    def _flush_barriers(self):
+        """On an early stop, peers parked at a barrier would wait forever
+        (the stopping workers never arrive) — release them to finish."""
+        barriers, self._barriers = self._barriers, {}
+        for b in barriers.values():
+            for ww, _cont in b["waiters"]:
+                self._release(ww, lambda ww=ww: self._finish_worker(ww))
+
+    def _finish_worker(self, w: _WorkerState):
+        if w.finished:
+            return
+        w.finished = True
+        if self._stopping:
+            self.object_store.put(f"ckpt/w{w.wid}", {"iter": w.it},
+                                  nbytes=self.ckpt_bytes)
+        self._close_invocation(w)
+        self._tr(w, "finish")
+        if all(ww.finished for ww in self._workers):
+            self._wall = self.now    # stale timer events may pop later
+
+    # -- run -----------------------------------------------------------------
+    def run(self) -> EngineResult:
+        for w in self._workers:
+            self._start_worker(w)
+        links = list(self.links.values())
+        while self._q:
+            t, _, fn = heapq.heappop(self._q)
+            if t > self.now:
+                if self._sync_active > 0:
+                    self._sync_busy += t - self.now
+                for link in links:
+                    link.progress(t)
+                self.now = t
+            fn()
+        unfinished = [w.wid for w in self._workers if not w.finished]
+        if unfinished:
+            raise RuntimeError(f"event engine deadlock: workers {unfinished} "
+                               f"never finished (mode={self.mode})")
+
+        sync_s = self._sync_busy
+        self.param_store.keep_alive(sync_s)
+        lambda_usd = (self._gb_seconds * LAMBDA_GB_SECOND
+                      + self._requests * LAMBDA_PER_REQUEST)
+        store_hourly = (self.param_store.vcpus * ECS_VCPU_HOUR
+                        + self.param_store.memory_gb * ECS_GB_HOUR)
+        n_objects = max(math.ceil(self.w.sample_bytes * self.samples
+                                  / DATA_OBJECT_BYTES), 1)
+        store_usd = (sync_s / 3600.0 * store_hourly
+                     + n_objects * S3_GET_PER_1K / 1000.0 * self.n)
+        return EngineResult(
+            wall_s=self._wall, lambda_usd=lambda_usd, store_usd=store_usd,
+            iters_done=self._g_done,
+            samples_done=min(self._g_done * self.global_batch, self.samples),
+            sync_s=sync_s, restarts=self._cap_restarts,
+            failures=self._failures, invocations=self._requests,
+            iter_times=self._iter_times, stopped_early=self._stopping,
+            trace=self._trace)

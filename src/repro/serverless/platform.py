@@ -27,6 +27,8 @@ LAMBDA_MAX_MEMORY_MB = 10_240
 MB_PER_VCPU = 1769.0
 PEAK_NET_GBPS = 0.075        # ~600 Mbit/s per function at full memory
 PEAK_CPU_GFLOPS = 40.0       # effective GFLOP/s of one Lambda vCPU (f32)
+CHECKPOINT_RESTORE_S = 1.5   # restore model + iterator state on restart
+DATA_OBJECT_BYTES = 250e6    # paper: dataset split into <=250MB objects
 
 
 def vcpus(memory_mb: float) -> float:
@@ -53,6 +55,14 @@ class BillingLedger:
         self.gb_seconds += memory_mb / 1024.0 * duration_s
         self.requests += 1
 
+    def charge_fleet(self, memory_mb: float, n_workers: int,
+                     duration_s: float, invocations_per_worker: int = 1):
+        """Bill a fleet the way Lambda does: every worker is its own
+        invocation (n requests), and every duration-cap restart is a fresh
+        request on top. ``duration_s`` is the per-worker billed duration."""
+        self.gb_seconds += memory_mb / 1024.0 * duration_s * n_workers
+        self.requests += n_workers * max(invocations_per_worker, 1)
+
     def charge(self, key: str, dollars: float):
         self.extra[key] = self.extra.get(key, 0.0) + dollars
 
@@ -73,6 +83,7 @@ class InvocationRecord:
     end: float = 0.0
     cold_start_s: float = 0.0
     failed: bool = False
+    resumed: bool = False        # continuation of a duration-capped invocation
 
 
 class ServerlessPlatform:
@@ -111,9 +122,25 @@ class ServerlessPlatform:
     def iteration_fails(self) -> bool:
         return bool(self.rng.random_sample() < self.failure_rate)
 
-    def finish(self, rec: InvocationRecord, memory_mb: float, end: float):
-        rec.end = end
-        self.ledger.charge_fn(memory_mb, max(end - rec.start, 0.0))
+    def finish(self, rec: InvocationRecord, memory_mb: float,
+               end: float) -> List[InvocationRecord]:
+        """Bill an invocation, enforcing the duration cap: a run longer than
+        ``max_duration_s`` is split into a chain of capped invocations
+        (checkpoint/restart), each billed as its own request — a single
+        Lambda invocation can never bill beyond the cap."""
+        recs = [rec]
+        duration = max(end - rec.start, 0.0)
+        while duration > self.max_duration_s:
+            rec.end = rec.start + self.max_duration_s
+            self.ledger.charge_fn(memory_mb, self.max_duration_s)
+            duration -= self.max_duration_s
+            rec = InvocationRecord(worker_id=rec.worker_id, start=rec.end,
+                                   cold_start_s=rec.cold_start_s, resumed=True)
+            self.invocations.append(rec)
+            recs.append(rec)
+        rec.end = rec.start + duration
+        self.ledger.charge_fn(memory_mb, duration)
+        return recs
 
     # -- time ------------------------------------------------------------------
     def advance(self, dt: float):

@@ -32,6 +32,45 @@ class TransferStats:
     bytes_out: float = 0.0
 
 
+class SharedLink:
+    """Processor-sharing bandwidth resource for the event engine.
+
+    The analytic model divides a store's aggregate bandwidth by a static
+    ``concurrent=n``; here, transfers that *actually overlap in time* share
+    the link: each of k concurrent flows progresses at
+    ``min(per_stream, aggregate / k)`` GB/s, re-evaluated whenever a flow
+    joins or leaves. (Keep-alive billing is the engine's job: it tracks the
+    union of time gradient-sync transfers are outstanding, across links.)"""
+
+    def __init__(self, name: str, aggregate_gbps: float,
+                 per_stream_gbps: float, latency_s: float):
+        self.name = name
+        self.aggregate_gbps = aggregate_gbps
+        self.per_stream_gbps = per_stream_gbps
+        self.latency_s = latency_s
+        self.flows: Dict[int, Any] = {}      # fid -> transfer (remaining_gb)
+        self.setup = 0                       # transfers in the latency phase
+        self.generation = 0                  # bumped on any flow-set change
+        self.last_t = 0.0
+
+    def rate(self) -> float:
+        k = len(self.flows)
+        if k == 0:
+            return 0.0
+        return min(self.per_stream_gbps, self.aggregate_gbps / k)
+
+    def progress(self, now: float):
+        """Advance all flows to ``now`` at the rate that held since the last
+        flow-set change (rates only change when the set changes)."""
+        dt = now - self.last_t
+        if dt > 0:
+            r = self.rate()
+            if r > 0:
+                for tr in self.flows.values():
+                    tr.remaining_gb = max(tr.remaining_gb - r * dt, 0.0)
+        self.last_t = now
+
+
 class ObjectStore:
     """S3-like object store."""
 
@@ -65,6 +104,11 @@ class ObjectStore:
         return (self.stats.puts * S3_PUT_PER_1K / 1000.0
                 + self.stats.gets * S3_GET_PER_1K / 1000.0)
 
+    def link(self) -> SharedLink:
+        """A contended-bandwidth view of this store for the event engine."""
+        return SharedLink("object", self.aggregate_gbps,
+                          self.per_stream_gbps, self.latency_s)
+
 
 class ParamStore:
     """Redis-like in-memory KV store on an ECS container."""
@@ -97,6 +141,11 @@ class ParamStore:
 
     def keep_alive(self, seconds: float):
         self.alive_seconds += seconds
+
+    def link(self, per_fn_gbps: float = 10.0) -> SharedLink:
+        """A contended-bandwidth view of this store for the event engine."""
+        return SharedLink("param", self.node_gbps, per_fn_gbps,
+                          self.latency_s)
 
     def container_cost(self) -> float:
         hours = self.alive_seconds / 3600.0

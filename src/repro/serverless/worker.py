@@ -59,13 +59,26 @@ def compute_time(w: Workload, local_batch: int, memory_mb: float) -> float:
     return w.flops_per_sample * local_batch / (fn_gflops(memory_mb) * 1e9)
 
 
-def comm_breakdown(scheme: str, grad_bytes: float, n_workers: int,
-                   memory_mb: float, param_store: ParamStore,
-                   object_store: ObjectStore,
-                   n_shards: Optional[int] = None,
-                   extra_upload_bytes: float = 0.0,
-                   topk_ratio: float = 0.05) -> Dict[str, float]:
-    """Per-iteration communication steps (paper Figs. 5 and 7).
+@dataclasses.dataclass(frozen=True)
+class CommPhase:
+    """One per-worker communication step of an iteration.
+
+    Shared between the analytic model (``comm_breakdown`` sums static phase
+    times) and the event engine (``repro.serverless.events`` turns each
+    phase into a contended transfer on the store's SharedLink).
+    """
+    name: str
+    store: str                 # "param" | "object"
+    nbytes: float              # bytes moved by one (busiest) worker
+    requests: int = 1          # store round-trips -> latency multiplier
+    barrier_after: bool = False  # bsp data dependency (engine only)
+
+
+def comm_plan(scheme: str, grad_bytes: float, n_workers: int,
+              n_shards: Optional[int] = None,
+              extra_upload_bytes: float = 0.0,
+              topk_ratio: float = 0.05) -> List[CommPhase]:
+    """Per-iteration communication phases (paper Figs. 5 and 7).
 
     schemes:
       "hier"      — SMLT: shard -> aggregate -> redistribute via param store.
@@ -80,44 +93,63 @@ def comm_breakdown(scheme: str, grad_bytes: float, n_workers: int,
     n = n_workers
     m = n_shards or n
     G = grad_bytes + extra_upload_bytes
-    fn_bw = fn_net_gbps(memory_mb) * 8  # not a bottleneck vs store; keep wide
 
     if scheme == "hier_topk":
         up = 2.0 * topk_ratio            # (4B value + 4B index) / 4B dense
         dense_dl = min(1.0, n * topk_ratio)
-        t = lambda nbytes, req=1: (param_store.xfer_time(
-            nbytes, concurrent=n, per_fn_gbps=fn_bw)
-            + param_store.latency_s * max(req - 1, 0))
-        return {"UL-Shard": t(G * up, m), "DL-Shard": t(n * G * up / m, n),
-                "UL-aggr": t(G * dense_dl / m),
-                "DL-grad": t(G * dense_dl, m)}
-
+        return [
+            CommPhase("UL-Shard", "param", G * up, m, barrier_after=True),
+            CommPhase("DL-Shard", "param", n * G * up / m, n),
+            CommPhase("UL-aggr", "param", G * dense_dl / m, 1,
+                      barrier_after=True),
+            CommPhase("DL-grad", "param", G * dense_dl, m),
+        ]
     if scheme == "hier":
-        def t(nbytes, requests=1):
-            return (param_store.xfer_time(nbytes, concurrent=n,
-                                          per_fn_gbps=fn_bw)
-                    + param_store.latency_s * max(requests - 1, 0))
-
         # each of the busiest aggregators owns ceil(m/n) shards; with m < n
         # the n-m idle workers don't help and the busy ones pull n*G/m
         # (paper footnote 4: "m less than n will cause some workers to be
         # idle during aggregation, which will affect performance")
-        shards_per_agg = max(math.ceil(m / n), 1)
-        return {
-            "UL-Shard": t(G, m),                      # own grad as m shards
-            "DL-Shard": t(shards_per_agg * n * (G / m),
-                          shards_per_agg * n),        # collect owned shards
-            "UL-aggr": t(shards_per_agg * G / m, shards_per_agg),
-            "DL-grad": t(m * (G / m), m),             # all aggregated shards
-        }
+        spa = max(math.ceil(m / n), 1)
+        return [
+            CommPhase("UL-Shard", "param", G, m,          # own grad, m shards
+                      barrier_after=True),
+            CommPhase("DL-Shard", "param", spa * n * (G / m),
+                      spa * n),                           # collect owned shards
+            CommPhase("UL-aggr", "param", spa * G / m, spa,
+                      barrier_after=True),
+            CommPhase("DL-grad", "param", m * (G / m), m),  # all agg shards
+        ]
     if scheme == "ps":
-        t = lambda nbytes: param_store.xfer_time(nbytes, concurrent=n,
-                                                 per_fn_gbps=fn_bw)
-        return {"UL-grad": t(G), "DL-grad": t(n * G)}
+        return [CommPhase("UL-grad", "param", G, 1, barrier_after=True),
+                CommPhase("DL-grad", "param", n * G, 1)]
     if scheme == "ps_s3":
-        return {"UL-grad": object_store.put_time(G, concurrent=n),
-                "DL-grad": object_store.get_time(n * G, concurrent=n)}
+        return [CommPhase("UL-grad", "object", G, 1, barrier_after=True),
+                CommPhase("DL-grad", "object", n * G, 1)]
     raise ValueError(scheme)
+
+
+def comm_breakdown(scheme: str, grad_bytes: float, n_workers: int,
+                   memory_mb: float, param_store: ParamStore,
+                   object_store: ObjectStore,
+                   n_shards: Optional[int] = None,
+                   extra_upload_bytes: float = 0.0,
+                   topk_ratio: float = 0.05) -> Dict[str, float]:
+    """Static per-phase times: every phase is assumed to run with all n
+    workers contending (the event engine relaxes this to *actual* overlap)."""
+    n = n_workers
+    fn_bw = fn_net_gbps(memory_mb) * 8  # not a bottleneck vs store; keep wide
+    out: Dict[str, float] = {}
+    for ph in comm_plan(scheme, grad_bytes, n, n_shards=n_shards,
+                        extra_upload_bytes=extra_upload_bytes,
+                        topk_ratio=topk_ratio):
+        if ph.store == "param":
+            out[ph.name] = (param_store.xfer_time(ph.nbytes, concurrent=n,
+                                                  per_fn_gbps=fn_bw)
+                            + param_store.latency_s * max(ph.requests - 1, 0))
+        else:
+            out[ph.name] = (object_store.put_time(ph.nbytes, concurrent=n)
+                            + object_store.latency_s * max(ph.requests - 1, 0))
+    return out
 
 
 def iteration_time(w: Workload, scheme: str, n_workers: int, memory_mb: float,
@@ -165,19 +197,72 @@ def join_shards(shards: List[np.ndarray], size: int) -> np.ndarray:
     return np.concatenate(shards)[:size]
 
 
+def parse_sync_mode(sync_mode: str, staleness: int = 0):
+    """Parse ``"bsp" | "ssp" | "ssp(k)" | "async"`` into (mode, bound).
+
+    bsp is ssp with bound 0; async is ssp with an unbounded window."""
+    m = sync_mode.strip().lower()
+    if m.startswith("ssp(") and m.endswith(")"):
+        return "ssp", int(m[4:-1])
+    if m == "bsp":
+        return "bsp", 0
+    if m == "ssp":
+        return "ssp", staleness
+    if m == "async":
+        return "async", None
+    raise ValueError(f"sync_mode {sync_mode!r}")
+
+
 class LocalWorkerPool:
     """Semantic SMLT: n logical workers with real JAX grads, synchronizing
     via the (simulated) param store exactly as Figure 5 prescribes.
 
     ``use_kernel=True`` runs the shard aggregation (step 3 of Fig. 5)
-    through the Pallas ``hier_agg`` kernel instead of numpy."""
+    through the Pallas ``hier_agg`` kernel instead of numpy.
+
+    ``sync_mode`` selects the staleness semantics that mirror the event
+    engine's timing modes (``repro.serverless.events``):
+      - "bsp": every worker's gradient is computed at the current params
+        (exactly equivalent to full-batch all-reduce; the seed behavior).
+      - "ssp(k)": worker w refreshes its param snapshot every k+1 steps
+        (staggered by worker id), so gradients are computed at params at
+        most k versions stale — the bounded-staleness numerics.
+      - "async": workers refresh on an independent seeded schedule with no
+        bound (geometric gaps), the fully-asynchronous numerics.
+    """
 
     def __init__(self, grad_fn: Callable, n_workers: int,
-                 param_store: ParamStore, *, use_kernel: bool = False):
+                 param_store: ParamStore, *, use_kernel: bool = False,
+                 sync_mode: str = "bsp", staleness: int = 0, seed: int = 0,
+                 async_refresh_p: float = 0.5):
         self.grad_fn = grad_fn
         self.n = n_workers
         self.store = param_store
         self.use_kernel = use_kernel
+        self.mode, self.staleness = parse_sync_mode(sync_mode, staleness)
+        self.async_refresh_p = async_refresh_p
+        self._rng = np.random.RandomState(seed)
+        self._iter = 0
+        self._snaps: List = [None] * n_workers    # stale param snapshots
+        self._vers = [0] * n_workers
+
+    def _worker_params(self, w: int, params):
+        """The (possibly stale) params worker ``w`` computes gradients at."""
+        if self.mode == "bsp":
+            return params
+        if self._snaps[w] is None:
+            refresh = True
+        elif self.mode == "ssp":
+            k = self.staleness
+            # staggered refresh every k+1 steps; the gap never exceeds k
+            refresh = ((self._iter + w) % (k + 1) == 0
+                       or self._iter - self._vers[w] > k)
+        else:                                      # async: unbounded gaps
+            refresh = self._rng.random_sample() < self.async_refresh_p
+        if refresh:
+            self._snaps[w] = params
+            self._vers[w] = self._iter
+        return self._snaps[w]
 
     def step(self, params, global_batch) -> Dict:
         """global_batch: dict of arrays with leading dim divisible by n.
@@ -189,7 +274,7 @@ class LocalWorkerPool:
             sl = jax.tree.map(
                 lambda x: x[w * (x.shape[0] // n):(w + 1) * (x.shape[0] // n)],
                 global_batch)
-            g = self.grad_fn(params, sl)
+            g = self.grad_fn(self._worker_params(w, params), sl)
             flat = flatten_grads(g)
             shards = make_shards(flat, n)
             shards_meta = (len(flat), g)
@@ -210,4 +295,5 @@ class LocalWorkerPool:
         flat_size, g_like = shards_meta
         agg = [self.store.get(f"aggr/{j}") for j in range(n)]
         mean_flat = join_shards(agg, flat_size)
+        self._iter += 1
         return unflatten_grads(mean_flat, g_like)

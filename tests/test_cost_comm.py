@@ -1,8 +1,11 @@
 """Cost model + communication model properties (paper Sections 3.3, 4.3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # optional dep: fixed example cases
+    from hypothesis_fallback import given, settings, st
 
 from repro.core import Config
 from repro.core.cost_model import epoch_estimate, vm_epoch_estimate, VM_TYPES

@@ -1,0 +1,238 @@
+"""Discrete-event execution core: determinism, zero-variance equivalence
+with the analytic model, straggler/sync-mode dynamics, duration-cap and
+billing semantics, and the LocalWorkerPool's matching stale-gradient
+numerics."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import Config, ConfigSpace, EpochPlan, Goal, TaskScheduler
+from repro.core.cost_model import epoch_estimate
+from repro.serverless import (WORKLOADS, EventEngine, LocalWorkerPool,
+                              ObjectStore, ParamStore, ServerlessPlatform)
+from repro.serverless.platform import InvocationRecord
+
+W = WORKLOADS["bert-small"]
+
+
+def engine(w=W, scheme="hier", n=16, mem=4096, batch=1024, samples=20_000,
+           **kw):
+    return EventEngine(w, scheme, n, mem, batch, ParamStore(), ObjectStore(),
+                       samples=samples, **kw)
+
+
+# -- zero-variance equivalence (acceptance criterion) ------------------------
+
+CASES = [
+    ("resnet18", "hier", 16, 3072, 1024, 20_000),
+    ("resnet18", "ps", 16, 3072, 1024, 20_000),
+    ("resnet18", "ps_s3", 16, 3072, 1024, 20_000),
+    ("bert-small", "hier", 32, 4096, 2048, 40_000),
+    ("bert-small", "ps", 32, 4096, 2048, 40_000),
+    ("bert-small", "ps_s3", 32, 4096, 2048, 40_000),
+    ("resnet50", "hier", 8, 2048, 512, 10_000),
+    ("resnet50", "ps", 8, 2048, 512, 10_000),
+    ("resnet50", "ps_s3", 8, 2048, 512, 10_000),
+]
+
+
+@pytest.mark.parametrize("name,scheme,n,mem,batch,samples", CASES)
+def test_zero_variance_matches_analytic(name, scheme, n, mem, batch, samples):
+    """With zero straggler variance, no failures, bsp: the event engine
+    must reproduce the closed-form epoch_estimate within 1%."""
+    w = WORKLOADS[name]
+    est = epoch_estimate(w, scheme, Config(n, mem), batch, ParamStore(),
+                         ObjectStore(), samples=samples)
+    r = engine(w, scheme, n, mem, batch, samples, seed=0).run()
+    assert r.wall_s == pytest.approx(est.wall_s, rel=0.01)
+    assert r.cost_usd == pytest.approx(est.cost_usd, rel=0.01)
+    assert r.iters_done == est.iters
+
+
+def test_zero_variance_matches_with_duration_cap_restarts():
+    """Equivalence must survive the checkpoint/restart path (long epoch,
+    small fleet -> many 15-min windows)."""
+    w = WORKLOADS["bert-medium"]
+    est = epoch_estimate(w, "hier", Config(4, 2048), 512, ParamStore(),
+                         ObjectStore(), samples=60_000)
+    r = engine(w, "hier", 4, 2048, 512, 60_000, seed=0).run()
+    assert est.restarts_per_worker >= 1
+    assert r.restarts == 4 * est.restarts_per_worker
+    assert r.wall_s == pytest.approx(est.wall_s, rel=0.01)
+    assert r.cost_usd == pytest.approx(est.cost_usd, rel=0.01)
+
+
+# -- determinism -------------------------------------------------------------
+
+def test_trace_byte_identical_same_seed():
+    kw = dict(straggler_sigma=0.4, failure_rate=0.03, seed=7)
+    a = engine(**kw).run()
+    b = engine(**kw).run()
+    assert "\n".join(a.trace) == "\n".join(b.trace)
+    assert a.wall_s == b.wall_s and a.cost_usd == b.cost_usd
+
+
+def test_trace_differs_across_seeds():
+    a = engine(straggler_sigma=0.4, seed=1).run()
+    b = engine(straggler_sigma=0.4, seed=2).run()
+    assert "\n".join(a.trace) != "\n".join(b.trace)
+
+
+# -- straggler dynamics ------------------------------------------------------
+
+def test_straggler_tail_monotone():
+    """BSP pays the max of n lognormals per iteration: wall-clock must
+    grow strictly with the straggler sigma."""
+    walls = [engine(straggler_sigma=s, seed=0, samples=10_000).run().wall_s
+             for s in (0.0, 0.25, 0.6)]
+    assert walls[0] < walls[1] < walls[2]
+
+
+def test_relaxed_sync_never_slower():
+    """Gates only remove waiting: under stragglers,
+    wall(async) <= wall(ssp(2)) <= wall(bsp)."""
+    kw = dict(straggler_sigma=0.5, seed=0, samples=10_000)
+    bsp = engine(sync_mode="bsp", **kw).run()
+    ssp = engine(sync_mode="ssp", staleness=2, **kw).run()
+    asy = engine(sync_mode="async", **kw).run()
+    assert asy.wall_s <= ssp.wall_s + 1e-9
+    assert ssp.wall_s <= bsp.wall_s + 1e-9
+    assert bsp.iters_done == ssp.iters_done == asy.iters_done
+
+
+def test_failures_redo_iterations_and_invoke():
+    ok = engine(seed=3).run()
+    bad = engine(failure_rate=0.05, seed=3).run()
+    assert bad.failures > 0
+    assert bad.wall_s > ok.wall_s
+    assert bad.invocations > ok.invocations      # each failure re-invokes
+
+
+# -- duration-cap / billing semantics ---------------------------------------
+
+def test_platform_finish_clamps_to_cap():
+    """An invocation reported past max_duration_s is split into capped
+    restarts, each billed as its own request."""
+    plat = ServerlessPlatform(max_duration_s=900.0)
+    rec = InvocationRecord(worker_id=0, start=0.0)
+    plat.invocations.append(rec)
+    recs = plat.finish(rec, 1024.0, end=2000.0)
+    assert len(recs) == 3                        # 900 + 900 + 200
+    assert all(r.end - r.start <= 900.0 + 1e-9 for r in recs)
+    assert plat.ledger.requests == 3
+    assert plat.ledger.gb_seconds == pytest.approx(2000.0)
+    assert recs[1].resumed and recs[2].resumed
+
+
+def test_fleet_billing_one_request_per_worker_invocation():
+    """Satellite: the scheduler must record n requests per epoch (plus
+    restarts), not 1 for the whole fleet."""
+    plat = ServerlessPlatform(seed=0)
+    sched = TaskScheduler(plat, ObjectStore(), ParamStore(), seed=0,
+                          space=ConfigSpace(max_workers=64))
+    res = sched.run([EpochPlan(512, WORKLOADS["resnet18"], samples=20_000)],
+                    Goal("min_time"), adaptive=False,
+                    fixed_config=Config(workers=16, memory_mb=3072))
+    eps = [e for e in res.events if e.kind == "epoch"]
+    assert plat.ledger.requests == 16 * (eps[0].restarts + 1)
+
+
+def test_engine_invocations_match_lambda_semantics():
+    r = engine(w=WORKLOADS["bert-medium"], n=4, mem=2048, batch=512,
+               samples=60_000, seed=0).run()
+    assert r.invocations == 4 + r.restarts       # 1 per worker + 1 per restart
+
+
+# -- mid-epoch adaptation ----------------------------------------------------
+
+def test_on_iteration_early_stop_checkpoints():
+    r = engine(n=8, samples=20_000, seed=0,
+               on_iteration=lambda g, t, dt: g >= 7).run()
+    assert r.stopped_early
+    assert r.iters_done == 7
+    assert r.samples_done == 7 * 1024
+
+
+def test_scheduler_reoptimizes_mid_epoch_on_drift():
+    """A 4x platform slowdown partway through the epoch must trip the
+    ThroughputMonitor and trigger a mid-epoch re-optimization."""
+    plat = ServerlessPlatform(seed=0)
+    sched = TaskScheduler(plat, ObjectStore(), ParamStore(), seed=0,
+                          space=ConfigSpace(max_workers=64), engine="event",
+                          engine_opts={"straggler_sigma": 0.1,
+                                       "slowdown_at_iter": 20,
+                                       "slowdown_factor": 4.0})
+    res = sched.run([EpochPlan(1024, WORKLOADS["bert-small"],
+                               samples=300_000)], Goal("min_time"))
+    kinds = [e.kind for e in res.events]
+    assert "reoptimize_mid" in kinds
+    assert res.epochs_done == 1
+    assert len(res.config_history) >= 2          # redeployed mid-epoch
+
+
+def test_scheduler_event_path_near_analytic_at_zero_variance():
+    def run(engine_kind):
+        plat = ServerlessPlatform(seed=0)
+        sched = TaskScheduler(plat, ObjectStore(), ParamStore(), seed=0,
+                              space=ConfigSpace(max_workers=64),
+                              engine=engine_kind)
+        return sched.run([EpochPlan(1024, W, samples=30_000)],
+                         Goal("min_time"), adaptive=False,
+                         fixed_config=Config(workers=16, memory_mb=4096))
+
+    a, e = run("analytic"), run("event")
+    assert e.wall_s == pytest.approx(a.wall_s, rel=0.01)
+    assert e.cost_usd == pytest.approx(a.cost_usd, rel=0.01)
+
+
+# -- LocalWorkerPool stale-gradient numerics --------------------------------
+
+def _tiny_model():
+    import jax
+    from repro.configs import ARCHS, reduced, reduced_batch
+    from repro.models import registry
+    cfg = reduced(ARCHS["olmo-1b"]).replace(n_layers=1, d_model=64)
+    batch = reduced_batch(cfg, batch=8, seq=16)
+    params0 = registry.init(jax.random.key(0), cfg)
+    grad_fn = jax.jit(lambda p, b: jax.grad(
+        lambda q: registry.loss_fn(q, cfg, b))(p))
+    loss_fn = jax.jit(lambda p, b: registry.loss_fn(p, cfg, b))
+    return params0, batch, grad_fn, loss_fn
+
+
+def _train(pool, params0, batch, loss_fn, steps=6, lr=0.1):
+    from repro.optim import apply_sgd
+    p = params0
+    losses = [float(loss_fn(p, batch))]
+    for _ in range(steps):
+        g = pool.step(p, batch)
+        p = apply_sgd(p, g, lr)
+        losses.append(float(loss_fn(p, batch)))
+    return losses
+
+
+def test_ssp0_is_exactly_bsp():
+    """ssp with bound 0 refreshes every step -> bit-identical to bsp."""
+    params0, batch, grad_fn, loss_fn = _tiny_model()
+    bsp = _train(LocalWorkerPool(grad_fn, 4, ParamStore()),
+                 params0, batch, loss_fn)
+    ssp0 = _train(LocalWorkerPool(grad_fn, 4, ParamStore(),
+                                  sync_mode="ssp(0)"),
+                  params0, batch, loss_fn)
+    np.testing.assert_array_equal(bsp, ssp0)
+
+
+def test_ssp_and_async_converge_on_quickstart_model():
+    """Bounded-stale and async gradients still train the quickstart model:
+    loss decreases clearly under both; small k stays close to bsp."""
+    params0, batch, grad_fn, loss_fn = _tiny_model()
+    results = {}
+    for mode, kw in [("bsp", {}), ("ssp2", {"sync_mode": "ssp(2)"}),
+                     ("async", {"sync_mode": "async", "seed": 0})]:
+        pool = LocalWorkerPool(grad_fn, 4, ParamStore(), **kw)
+        results[mode] = _train(pool, params0, batch, loss_fn, steps=8)
+    for mode, losses in results.items():
+        assert losses[-1] < losses[0] - 0.5, (mode, losses)
+    # staleness costs something but not divergence
+    assert results["ssp2"][-1] < results["ssp2"][0] - 0.5

@@ -12,8 +12,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # optional dep: fixed example cases
+    from hypothesis_fallback import given, settings, st
 
 from repro.serverless import LocalWorkerPool, ParamStore
 from repro.serverless.worker import (flatten_grads, join_shards, make_shards,

@@ -4,8 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # optional dep: fixed example cases
+    from hypothesis_fallback import given, settings, st
 
 from repro.kernels import ref
 from repro.models import layers as L
