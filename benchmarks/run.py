@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all benchmarks
     PYTHONPATH=src python -m benchmarks.run fig7 fig8  # subset
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI smoke subset
+
+``--quick`` runs the event-path benchmarks at reduced scale (modules whose
+``run`` accepts ``quick=True``) — a smoke check that every registered
+module still imports, runs, and emits rows, cheap enough for CI.
 
 Prints a ``name,us_per_call,derived`` CSV line per benchmark (us_per_call is
 the harness wall time for that benchmark; `derived` is its headline result)
@@ -10,14 +15,16 @@ experiments/bench/<name>.json.
 """
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
 from benchmarks.common import emit_json
 from benchmarks import (async_staleness, comm_breakdown, comm_scaling,
-                        config_sensitivity, dynamic_batching, kernels_bench,
-                        nas_adaptation, online_learning, optimizer_compare,
-                        roofline, scenarios, serving_slo, shard_ablation,
+                        config_sensitivity, dynamic_batching, hetero_fleet,
+                        kernels_bench, multi_job, nas_adaptation,
+                        online_learning, optimizer_compare, roofline,
+                        scenarios, serving_slo, shard_ablation,
                         straggler_tail)
 
 BENCHES = {
@@ -33,19 +40,36 @@ BENCHES = {
     "serving_slo_batching": serving_slo,
     "event_straggler_tail": straggler_tail,
     "event_async_staleness": async_staleness,
+    "event_hetero_fleet": hetero_fleet,
+    "event_multi_job": multi_job,
     "kernels": kernels_bench,
     "roofline": roofline,
 }
 
+# the CI smoke set: the event-path benchmarks (cheap, no BO search inside)
+# plus one analytic module, all at reduced scale where supported
+QUICK = ["fig7_comm_breakdown", "event_straggler_tail",
+         "event_async_staleness", "event_hetero_fleet", "event_multi_job"]
+
+
+def _run_mod(mod, quick: bool):
+    if quick and "quick" in inspect.signature(mod.run).parameters:
+        return mod.run(quick=True)
+    return mod.run()
+
+
 def main() -> None:
-    which = sys.argv[1:] or list(BENCHES)
+    args = sys.argv[1:]
+    quick = "--quick" in args
+    which = [a for a in args if not a.startswith("--")]
+    which = which or (QUICK if quick else list(BENCHES))
     print("name,us_per_call,derived")
     roofline_rows = None
     for name in which:
         mod = BENCHES[[k for k in BENCHES if name in k][0]] \
             if name not in BENCHES else BENCHES[name]
         t0 = time.perf_counter()
-        rows = mod.run()
+        rows = _run_mod(mod, quick)
         us = (time.perf_counter() - t0) * 1e6
         derived = mod.summarize(rows) if hasattr(mod, "summarize") else ""
         print(f"{name},{us:.0f},\"{derived}\"", flush=True)

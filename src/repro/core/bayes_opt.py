@@ -73,9 +73,15 @@ def expected_improvement(mu, sigma, y_best):
 
 @dataclasses.dataclass(frozen=True)
 class Config:
-    """One deployment configuration C_i = <workers, memory>."""
+    """One deployment configuration C_i = <workers, memory[, fleet mix]>.
+
+    ``small_frac`` is the searchable fleet-composition dimension: the
+    fraction of the fleet deployed as a cheaper half-memory "small" tier
+    (see ``repro.serverless.platform.fleet_from_config``). 0.0 keeps the
+    paper's homogeneous 2-D space."""
     workers: int
     memory_mb: int
+    small_frac: float = 0.0
 
     def as_unit(self, space: "ConfigSpace") -> np.ndarray:
         return np.array([
@@ -83,6 +89,7 @@ class Config:
             / max(space.max_workers - space.min_workers, 1),
             (self.memory_mb - space.min_memory)
             / max(space.max_memory - space.min_memory, 1),
+            self.small_frac,
         ])
 
 
@@ -93,13 +100,24 @@ class ConfigSpace:
     min_memory: int = 128
     max_memory: int = 10_240
     memory_step: int = 1           # 1 MB granularity (paper / Lambda quotas)
+    # fleet composition: when True, candidates also draw a small-tier
+    # fraction, letting the optimizer trade a cheaper mixed fleet against
+    # the bsp barrier cost of its slowest workers
+    search_fleet: bool = False
+    small_frac_choices: Tuple[float, ...] = (0.0, 0.25, 0.5)
 
     def sample(self, rng: np.random.RandomState, n: int) -> List[Config]:
         ws = rng.randint(self.min_workers, self.max_workers + 1, size=n)
         ms = rng.randint(0, (self.max_memory - self.min_memory)
                          // self.memory_step + 1, size=n)
-        return [Config(int(w), int(self.min_memory + m * self.memory_step))
-                for w, m in zip(ws, ms)]
+        if self.search_fleet:
+            fr = [self.small_frac_choices[i] for i in
+                  rng.randint(len(self.small_frac_choices), size=n)]
+        else:
+            fr = [0.0] * n
+        return [Config(int(w), int(self.min_memory + m * self.memory_step),
+                       float(f))
+                for w, m, f in zip(ws, ms, fr)]
 
 
 @dataclasses.dataclass

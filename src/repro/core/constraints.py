@@ -4,6 +4,32 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+# Convergence cost of stale gradients, as a fractional increase in the
+# iterations needed to reach the same loss per unit of staleness bound
+# (SSP analyses bound the error term linearly in the staleness; MLLess-style
+# significance filters eat some of it, hence a small default slope).
+SSP_PENALTY_PER_STEP = 0.02
+
+
+def staleness_inflation(sync_mode: str, staleness: int = 0,
+                        n_workers: int = 1,
+                        per_step: float = SSP_PENALTY_PER_STEP) -> float:
+    """Multiplicative iteration-count inflation of a sync mode: bsp pays
+    none; ssp(k) pays ``1 + per_step * k``; async has no bound, so its
+    expected staleness is taken as the worst-case n-1 peers in flight.
+
+    The Bayesian optimizer multiplies a candidate's predicted time *and*
+    cost by this factor, so a ``Goal`` trade-off reflects convergence cost
+    (more iterations to the same loss), not just the cheaper barrier-free
+    wall-clock of one epoch."""
+    from repro.serverless.worker import parse_sync_mode
+    mode, k = parse_sync_mode(sync_mode, staleness)
+    if mode == "bsp":
+        return 1.0
+    if mode == "ssp":
+        return 1.0 + per_step * max(k, 0)
+    return 1.0 + per_step * max(n_workers - 1, 0)      # async
+
 
 @dataclasses.dataclass(frozen=True)
 class Goal:
@@ -19,8 +45,16 @@ class Goal:
     deadline_s: Optional[float] = None
     budget_usd: Optional[float] = None
 
-    def objective_and_constraint(self, time_s: float, cost_usd: float):
-        """-> (objective value, constraint value or None, limit or None)."""
+    def objective_and_constraint(self, time_s: float, cost_usd: float,
+                                 inflation: float = 1.0):
+        """-> (objective value, constraint value or None, limit or None).
+
+        ``inflation`` is the ssp-aware staleness penalty
+        (``staleness_inflation``): the predicted epochs-to-converge scale
+        by it, so both the time and the dollars a candidate config is
+        judged on grow with its staleness bound."""
+        time_s = time_s * inflation
+        cost_usd = cost_usd * inflation
         if self.kind == "min_cost_deadline":
             return cost_usd, time_s, self.deadline_s
         if self.kind == "min_time_budget":

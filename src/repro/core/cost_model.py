@@ -13,9 +13,23 @@ from typing import Dict, Optional
 from repro.core.bayes_opt import Config
 from repro.serverless.platform import (  # noqa: F401  (re-exported names)
     CHECKPOINT_RESTORE_S, DATA_OBJECT_BYTES, LAMBDA_GB_SECOND,
-    LAMBDA_MAX_DURATION_S, LAMBDA_PER_REQUEST)
+    LAMBDA_MAX_DURATION_S, LAMBDA_PER_REQUEST, FleetSpec, fleet_from_config)
 from repro.serverless.stores import ObjectStore, ParamStore
 from repro.serverless.worker import Workload, iteration_time
+
+
+def _config_fleet(config: Config,
+                  fleet: Optional[FleetSpec]) -> Optional[FleetSpec]:
+    """Resolve the deployment's fleet: an explicit ``fleet`` wins; a config
+    with a searched fleet composition (``small_frac > 0``) expands to its
+    mixed fleet; a plain homogeneous config stays on the exact closed form
+    (fleet=None)."""
+    if fleet is not None:
+        return fleet
+    if getattr(config, "small_frac", 0.0) > 0.0:
+        return fleet_from_config(config.workers, config.memory_mb,
+                                 config.small_frac)
+    return None
 
 
 @dataclasses.dataclass
@@ -43,13 +57,23 @@ def epoch_estimate(w: Workload, scheme: str, config: Config,
                    framework_init_s: float = 4.0,
                    cold_start_s: float = 2.0,
                    max_duration_s: float = LAMBDA_MAX_DURATION_S,
-                   samples: Optional[int] = None) -> EpochEstimate:
-    """Analytic time+cost of one epoch under deployment ``config``."""
+                   samples: Optional[int] = None,
+                   fleet: Optional[FleetSpec] = None) -> EpochEstimate:
+    """Analytic time+cost of one epoch under deployment ``config``.
+
+    A heterogeneous ``fleet`` (explicit, or implied by
+    ``config.small_frac``) switches iteration costing to the mixed-memory
+    approximation (weighted-harmonic compute, min-bandwidth sync; see
+    ``iteration_time``) and bills GB-seconds at each worker's own memory —
+    cheap enough for the Bayesian optimizer to probe fleet compositions."""
+    fleet = _config_fleet(config, fleet)
     n, mem = config.workers, config.memory_mb
+    if fleet is not None:
+        n = len(fleet)
     samples = samples or w.dataset_samples
     iters = max(math.ceil(samples / global_batch), 1)
     it = iteration_time(w, scheme, n, mem, global_batch, param_store,
-                        object_store)
+                        object_store, fleet=fleet)
 
     # duration-cap restarts (Section 4.1): amortize init across a full window
     init_s = cold_start_s + framework_init_s
@@ -65,7 +89,8 @@ def epoch_estimate(w: Workload, scheme: str, config: Config,
 
     wall = epoch_compute_s + restart_overhead + init_s + data_fetch_s
 
-    lambda_usd = (n * mem / 1024.0 * wall * LAMBDA_GB_SECOND
+    total_mem = fleet.total_memory_mb if fleet is not None else n * mem
+    lambda_usd = (total_mem / 1024.0 * wall * LAMBDA_GB_SECOND
                   + n * invocations_per_worker * LAMBDA_PER_REQUEST)
     # param store billed only while synchronization is running (Section 4.3)
     sync_s = iters * it["comm"]
@@ -84,13 +109,18 @@ def epoch_estimate(w: Workload, scheme: str, config: Config,
 def profile_cost(w: Workload, scheme: str, config: Config, global_batch: int,
                  param_store: ParamStore, object_store: ObjectStore,
                  profile_iters: int = 3, *, framework_init_s: float = 4.0,
-                 cold_start_s: float = 2.0):
+                 cold_start_s: float = 2.0,
+                 fleet: Optional[FleetSpec] = None):
     """Time+cost of one Bayesian-optimizer profiling probe (k iterations)."""
+    fleet = _config_fleet(config, fleet)
+    n = len(fleet) if fleet is not None else config.workers
     it = iteration_time(w, scheme, config.workers, config.memory_mb,
-                        global_batch, param_store, object_store)
+                        global_batch, param_store, object_store, fleet=fleet)
+    total_mem = (fleet.total_memory_mb if fleet is not None
+                 else config.workers * config.memory_mb)
     wall = cold_start_s + framework_init_s + profile_iters * it["total"]
-    usd = (config.workers * config.memory_mb / 1024.0 * wall * LAMBDA_GB_SECOND
-           + config.workers * LAMBDA_PER_REQUEST)
+    usd = (total_mem / 1024.0 * wall * LAMBDA_GB_SECOND
+           + n * LAMBDA_PER_REQUEST)
     return wall, usd, it
 
 

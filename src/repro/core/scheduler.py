@@ -16,11 +16,11 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.bayes_opt import BayesianOptimizer, Config, ConfigSpace
-from repro.core.constraints import Goal
+from repro.core.constraints import Goal, staleness_inflation
 from repro.core.cost_model import epoch_estimate, profile_cost
 from repro.core.monitor import ThroughputMonitor
 from repro.serverless.events import EventEngine
-from repro.serverless.platform import ServerlessPlatform
+from repro.serverless.platform import ServerlessPlatform, fleet_from_config
 from repro.serverless.stores import ObjectStore, ParamStore
 from repro.serverless.worker import Workload
 
@@ -128,10 +128,13 @@ class TaskScheduler:
                                seed=self.seed, max_iters=max_iters)
         seeds = []
         if warm_start is not None:
+            # keep the fleet-composition dimension: the warm-start probe
+            # must profile the deployment that was actually running
             seeds = [Config(min(max(warm_start.workers, space.min_workers),
                                 space.max_workers),
                             min(max(warm_start.memory_mb, space.min_memory),
-                                space.max_memory))]
+                                space.max_memory),
+                            warm_start.small_frac)]
         t_prof = usd_prof = 0.0
         while not bo.done():
             c = seeds.pop(0) if seeds else bo.suggest()
@@ -157,7 +160,14 @@ class TaskScheduler:
                 cold_start_s=self.cold_start_s, samples=samples)
             total_t = est.wall_s * epochs_remaining
             total_c = est.cost_usd * epochs_remaining
-            obj, cons, _ = goal.objective_and_constraint(total_t, total_c)
+            # ssp-aware objective: a relaxed sync mode buys wall-clock per
+            # epoch but pays iterations-to-converge — judge the candidate
+            # on staleness-inflated time and dollars
+            infl = staleness_inflation(
+                self.engine_opts.get("sync_mode", "bsp"),
+                self.engine_opts.get("staleness", 0), c.workers)
+            obj, cons, _ = goal.objective_and_constraint(total_t, total_c,
+                                                         inflation=infl)
             bo.observe(c, obj, cons)
         # probes run real training iterations (the paper profiles live
         # throughput) — those samples count toward the epoch
@@ -195,6 +205,11 @@ class TaskScheduler:
             if opts.get("slowdown_at_iter") is not None:
                 opts["slowdown_at_iter"] = max(
                     opts["slowdown_at_iter"] - iters_epoch, 0)
+            # a searched fleet composition deploys as its mixed fleet
+            # (an explicit engine_opts fleet overrides the config's)
+            if config.small_frac > 0.0 and "fleet" not in opts:
+                opts["fleet"] = fleet_from_config(
+                    config.workers, config.memory_mb, config.small_frac)
             r = EventEngine(
                 plan.workload, self.scheme, config.workers, config.memory_mb,
                 plan.batch_size, self.param_store, self.object_store,

@@ -1,5 +1,8 @@
-from repro.serverless.events import EngineResult, EventEngine  # noqa: F401
-from repro.serverless.platform import BillingLedger, ServerlessPlatform  # noqa: F401
+from repro.serverless.events import (  # noqa: F401
+    ContentionDomain, EngineResult, EventEngine)
+from repro.serverless.platform import (  # noqa: F401
+    BillingLedger, FleetSpec, ServerlessPlatform, ShockModel, WorkerSpec,
+    fleet_from_config)
 from repro.serverless.stores import ObjectStore, ParamStore, SharedLink  # noqa: F401
 from repro.serverless.worker import (  # noqa: F401
     WORKLOADS, CommPhase, LocalWorkerPool, Workload, comm_breakdown,

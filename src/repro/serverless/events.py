@@ -13,11 +13,25 @@ which makes the paper's dynamics first-class:
   - **Contended stores**: transfers share store bandwidth only while they
     actually overlap (``SharedLink`` processor sharing), instead of the
     analytic model's static ``concurrent=n`` divisor.
+  - **Heterogeneous fleets**: a ``FleetSpec`` gives each worker its own
+    ``(memory_mb, tier)`` — per-worker compute rate (``compute_time``),
+    network cap (``fn_net_gbps``, carried as a per-flow cap on the shared
+    link), and GB-second billing rate. ``FleetSpec.homogeneous`` reproduces
+    the classic ``(n, memory_mb)`` deployment exactly.
   - **Stragglers**: per-(worker, iteration) lognormal compute multipliers
     (mean 1, so the zero-variance limit reproduces the analytic model).
   - **Mid-flight failures**: a worker dies partway through an iteration,
     re-invokes, restores the checkpoint from the ObjectStore, and redoes
     the iteration — stalling its barrier peers, as it would on Lambda.
+  - **Correlated failures**: a ``ShockModel`` layers a shared-shock process
+    on top of the independent per-iteration ``failure_rate``: shocks arrive
+    as a Poisson process and each one kills a random subset of the fleet at
+    once (optionally only a tier, e.g. "spot"), losing in-flight work.
+  - **Multi-job contention**: several engines can register into one
+    ``ContentionDomain`` — a shared clock + event queue. Engines that use
+    the same ``ParamStore``/``ObjectStore`` then contend on the *same*
+    ``SharedLink``, so cross-job transfers slow each other by their actual
+    overlap (the "noisy neighbor" regime of arXiv 2105.07806).
   - **Duration caps**: each invocation may hold at most
     ``max_duration_s - init - restore`` seconds of work; the engine
     checkpoints through the ObjectStore and restarts mid-segment (billing
@@ -47,8 +61,9 @@ import numpy as np
 from repro.serverless.platform import (CHECKPOINT_RESTORE_S,
                                        DATA_OBJECT_BYTES, LAMBDA_GB_SECOND,
                                        LAMBDA_MAX_DURATION_S,
-                                       LAMBDA_PER_REQUEST, InvocationRecord,
-                                       ServerlessPlatform, fn_net_gbps)
+                                       LAMBDA_PER_REQUEST, FleetSpec,
+                                       InvocationRecord, ServerlessPlatform,
+                                       ShockModel, fn_net_gbps)
 from repro.serverless.stores import (ECS_GB_HOUR, ECS_VCPU_HOUR, S3_GET_PER_1K,
                                      ObjectStore, ParamStore, SharedLink)
 from repro.serverless.worker import (CommPhase, Workload, comm_plan,
@@ -59,21 +74,116 @@ _EPS_GB = 1e-12          # flow remainder considered complete (~1e-3 byte)
 
 class _Transfer:
     """A pausable store transfer: ``requests * latency`` of setup, then a
-    flow on the link at the processor-sharing rate."""
+    flow on the link at the processor-sharing rate. ``cap_gbps`` is the
+    issuing worker's function-network limit (per-flow cap on the link)."""
     _ids = itertools.count()
 
-    __slots__ = ("fid", "link", "remaining_gb", "latency_left", "cb", "token",
-                 "is_sync")
+    __slots__ = ("fid", "link", "remaining_gb", "total_gb", "latency_left",
+                 "setup_latency_s", "cb", "token", "is_sync", "cap_gbps")
 
     def __init__(self, link: SharedLink, nbytes: float, latency_s: float,
-                 cb: Callable[[], None], is_sync: bool):
+                 cb: Callable[[], None], is_sync: bool,
+                 cap_gbps: Optional[float] = None):
         self.fid = next(self._ids)
         self.link = link
         self.remaining_gb = nbytes / 1e9
+        self.total_gb = self.remaining_gb
         self.latency_left = latency_s
+        self.setup_latency_s = latency_s
         self.cb = cb
         self.token = 0          # invalidates scheduled setup events on pause
         self.is_sync = is_sync  # gradient sync (param-store keep-alive window)
+        self.cap_gbps = cap_gbps
+
+
+class ContentionDomain:
+    """Shared clock + event queue + store links for one or more engines.
+
+    Each ``EventEngine`` owns a private domain by default (single-job runs
+    are unchanged). To co-simulate jobs, construct one domain and pass it
+    to every engine: engines that name the same store object share its
+    ``SharedLink``, so their transfers contend by actual overlap::
+
+        dom = ContentionDomain()
+        a = EventEngine(..., param_store=shared_ps, domain=dom, seed=0)
+        b = EventEngine(..., param_store=shared_ps, domain=dom, seed=1)
+        dom.run()
+        ra, rb = a.result(), b.result()
+    """
+
+    def __init__(self):
+        self.now = 0.0
+        self._q: List[Tuple[float, int, Callable]] = []
+        self._seq = itertools.count()
+        self._links: Dict[Tuple[int, str], SharedLink] = {}
+        self._engines: List["EventEngine"] = []
+        self._ran = False
+        # union of time *any* engine's sync transfers are outstanding: the
+        # honest keep-alive window for one param store shared across jobs
+        # (per-engine sync_s sums would double-bill the overlap)
+        self.sync_union_s = 0.0
+        # same union, kept per param store (id) — the billing basis when a
+        # store is shared: each engine is billed its proportional share
+        self._store_sync: Dict[int, float] = {}
+
+    def at(self, t: float, fn: Callable):
+        heapq.heappush(self._q, (t, next(self._seq), fn))
+
+    def link_for(self, store, kind: str) -> SharedLink:
+        """The one SharedLink all engines in this domain use for ``store``
+        (keyed by object identity, so distinct stores never contend)."""
+        key = (id(store), kind)
+        if key not in self._links:
+            self._links[key] = store.link()
+        return self._links[key]
+
+    def _register(self, engine: "EventEngine"):
+        if self._ran:
+            raise RuntimeError("cannot register an engine after run()")
+        self._engines.append(engine)
+        return len(self._engines) - 1   # job index
+
+    def run(self):
+        """Run every registered engine to completion on the shared clock."""
+        self._ran = True
+        groups: Dict[int, List["EventEngine"]] = {}
+        for eng in self._engines:
+            eng._start()
+            groups.setdefault(id(eng.param_store), []).append(eng)
+        links = list(self._links.values())
+        while self._q:
+            t, _, fn = heapq.heappop(self._q)
+            if t > self.now:
+                dt = t - self.now
+                if any(e._sync_active > 0 for e in self._engines):
+                    self.sync_union_s += dt
+                for sid, engs in groups.items():
+                    if any(e._sync_active > 0 for e in engs):
+                        self._store_sync[sid] = (
+                            self._store_sync.get(sid, 0.0) + dt)
+                for eng in self._engines:
+                    if eng._sync_active > 0:
+                        eng._sync_busy += dt
+                for link in links:
+                    link.progress(t)
+                self.now = t
+            fn()
+        for eng in self._engines:
+            eng._check_complete()
+
+    def store_keep_alive_share(self, engine: "EventEngine") -> float:
+        """One engine's billing share of its param store's keep-alive
+        window: the per-store *union* (the container is alive once, not
+        once per job) split across the sharing jobs in proportion to
+        their own sync windows. With a single job this is exactly the
+        engine's own ``sync_s``."""
+        peers = [e for e in self._engines
+                 if e.param_store is engine.param_store]
+        total = sum(e._sync_busy for e in peers)
+        if total <= 0.0:
+            return 0.0
+        union = self._store_sync.get(id(engine.param_store), 0.0)
+        return union * (engine._sync_busy / total)
 
 
 @dataclasses.dataclass
@@ -84,13 +194,17 @@ class EngineResult:
     store_usd: float
     iters_done: int              # globally completed iterations (min worker)
     samples_done: int
-    sync_s: float                # param-link busy time (keep-alive billing)
+    sync_s: float                # this job's own sync-outstanding window
+    store_billed_s: float        # keep-alive seconds this job was billed:
+                                 # its share of the store's cross-job union
+                                 # (== sync_s when the store isn't shared)
     restarts: int                # duration-cap restarts, fleet-wide
-    failures: int                # mid-flight failures, fleet-wide
+    failures: int                # mid-flight failures, fleet-wide (all kinds)
     invocations: int             # Lambda requests billed
     iter_times: List[float]      # completion timestamp per global iteration
     stopped_early: bool
     trace: List[str]
+    shock_events: int = 0        # shocks that killed at least one worker
 
     @property
     def cost_usd(self) -> float:
@@ -98,16 +212,19 @@ class EngineResult:
 
 
 class _WorkerState:
-    __slots__ = ("wid", "rng", "it", "inv_rec", "inv_count", "cap_gen",
-                 "seg_gen", "seg_end", "activity", "pending", "restarting",
-                 "finished")
+    __slots__ = ("wid", "rng", "it", "inv_rec", "inv_count", "inv_gen",
+                 "inv_cont", "cap_gen", "seg_gen", "seg_end", "activity",
+                 "pending", "restarting", "finished")
 
-    def __init__(self, wid: int, seed: int):
+    def __init__(self, wid: int, seed: int, job_idx: int = 0):
         self.wid = wid
-        self.rng = np.random.RandomState((seed * 1_000_003 + wid) % 2**31)
+        self.rng = np.random.RandomState(
+            (seed * 1_000_003 + wid + 611_953 * job_idx) % 2**31)
         self.it = 0                   # completed iterations
         self.inv_rec: Optional[InvocationRecord] = None
         self.inv_count = 0
+        self.inv_gen = 0              # invalidates stale init-window events
+        self.inv_cont = None          # continuation owed by the init window
         self.cap_gen = 0              # invalidates scheduled cap events
         self.seg_gen = 0              # invalidates scheduled compute ends
         self.seg_end = 0.0
@@ -119,13 +236,16 @@ class _WorkerState:
 
 class EventEngine:
     """Run one epoch of ``workload`` under deployment ``(n, memory_mb)``
-    as a discrete-event simulation. See the module docstring for the
-    semantics; construction mirrors ``epoch_estimate``'s signature so the
-    two paths are interchangeable."""
+    — or a heterogeneous ``fleet`` — as a discrete-event simulation. See
+    the module docstring for the semantics; construction mirrors
+    ``epoch_estimate``'s signature so the two paths are interchangeable."""
 
     def __init__(self, workload: Workload, scheme: str, n_workers: int,
                  memory_mb: float, global_batch: int,
                  param_store: ParamStore, object_store: ObjectStore, *,
+                 fleet: Optional[FleetSpec] = None,
+                 shocks: Optional[ShockModel] = None,
+                 domain: Optional[ContentionDomain] = None,
                  platform: Optional[ServerlessPlatform] = None,
                  sync_mode: str = "bsp", staleness: int = 0,
                  straggler_sigma: float = 0.0, failure_rate: float = 0.0,
@@ -138,8 +258,11 @@ class EventEngine:
                  trace_enabled: bool = True):
         self.w = workload
         self.scheme = scheme
-        self.n = n_workers
-        self.memory_mb = memory_mb
+        if fleet is None:
+            fleet = FleetSpec.homogeneous(n_workers, memory_mb)
+        self.fleet = fleet
+        self.n = len(fleet)
+        self.mem: Tuple[float, ...] = fleet.memories
         self.global_batch = global_batch
         self.param_store = param_store
         self.object_store = object_store
@@ -153,6 +276,7 @@ class EventEngine:
             raise ValueError(f"failure_rate must be in [0, 1), "
                              f"got {failure_rate}")
         self.failure_rate = failure_rate
+        self.shocks = shocks
         self.init_s = cold_start_s + framework_init_s
         self.restore_s = CHECKPOINT_RESTORE_S
         self.max_duration_s = max_duration_s
@@ -167,25 +291,30 @@ class EventEngine:
         self.on_iteration = on_iteration
         self.trace_enabled = trace_enabled
 
-        local_batch = max(global_batch // n_workers, 1)
-        self.base_compute_s = compute_time(workload, local_batch, memory_mb)
+        local_batch = max(global_batch // self.n, 1)
+        self.base_compute_s = [compute_time(workload, local_batch, m)
+                               for m in self.mem]
         self.plan: List[CommPhase] = comm_plan(
-            scheme, workload.grad_bytes, n_workers,
+            scheme, workload.grad_bytes, self.n,
             extra_upload_bytes=workload.extra_upload_bytes)
-        fn_bw = fn_net_gbps(memory_mb) * 8   # as in the analytic model
+        # per-worker function-network caps, carried as per-flow caps on the
+        # (possibly cross-job shared) links; *8 as in the analytic model
+        self.net_cap = [fn_net_gbps(m) * 8 for m in self.mem]
+        self.domain = domain or ContentionDomain()
+        self._job_idx = self.domain._register(self)
         self.links: Dict[str, SharedLink] = {
-            "param": param_store.link(per_fn_gbps=fn_bw),
-            "object": object_store.link(),
+            "param": self.domain.link_for(param_store, "param"),
+            "object": self.domain.link_for(object_store, "object"),
         }
         self.ckpt_bytes = 12.0 * workload.param_count  # params + Adam m,v
 
-        # event queue: (time, seq, fn)
-        self.now = 0.0
-        self._q: List[Tuple[float, int, Callable]] = []
-        self._seq = itertools.count()
-        self._workers = [_WorkerState(i, seed) for i in range(n_workers)]
+        self._workers = [_WorkerState(i, seed, self._job_idx)
+                         for i in range(self.n)]
+        self._shock_rng = np.random.RandomState(
+            (seed * 2_147_483_029 + 97 + self._job_idx) % 2**31)
         self._barriers: Dict[Tuple, Dict] = {}
         self._gate_waiters: List[Tuple[_WorkerState, Callable]] = []
+        self._started = False
         self._stopping = False
         self._g_done = 0
         self._iter_times: List[float] = []
@@ -194,15 +323,21 @@ class EventEngine:
         self._requests = 0
         self._cap_restarts = 0
         self._failures = 0
+        self._shock_events = 0
         # union of time any gradient-sync transfer is outstanding — the
         # param store's keep-alive window (matches the analytic sync_s)
         self._sync_active = 0
         self._sync_busy = 0.0
         self._wall = 0.0
+        self._result: Optional[EngineResult] = None
 
     # -- primitives ----------------------------------------------------------
+    @property
+    def now(self) -> float:
+        return self.domain.now
+
     def _at(self, t: float, fn: Callable):
-        heapq.heappush(self._q, (t, next(self._seq), fn))
+        self.domain.at(t, fn)
 
     def _tr(self, w: _WorkerState, what: str):
         if self.trace_enabled:
@@ -210,12 +345,11 @@ class EventEngine:
 
     def _reschedule(self, link: SharedLink):
         """Flow set changed: invalidate outstanding completion predictions
-        and schedule the next one at the new processor-sharing rate."""
+        and schedule the next one at the new processor-sharing rates."""
         link.generation += 1
         if not link.flows:
             return
-        r = link.rate()
-        t_next = self.now + min(tr.remaining_gb for tr in link.flows.values()) / r
+        t_next = self.now + link.next_completion_dt()
         self._at(t_next, lambda gen=link.generation: self._link_event(link, gen))
 
     def _link_event(self, link: SharedLink, gen: int):
@@ -239,8 +373,9 @@ class EventEngine:
                 self._sync_active -= 1
             cont()
 
+        cap = self.net_cap[w.wid] if store == "param" else None
         tr = _Transfer(link, nbytes, link.latency_s * max(requests, 1),
-                       finished, is_sync)
+                       finished, is_sync, cap_gbps=cap)
         if is_sync:
             self._sync_active += 1
         w.activity = ("transfer", tr, tr.cb)
@@ -292,10 +427,15 @@ class EventEngine:
         self.platform.invocations.append(rec)
         w.inv_rec = rec
         w.inv_count += 1
+        w.inv_gen += 1
+        w.inv_cont = cont
         self._tr(w, "invoke" if not resumed else "re-invoke")
 
-        def armed():
+        def armed(gen=w.inv_gen):
+            if gen != w.inv_gen:
+                return                           # killed during init window
             # the usable window opens once init/restore completes
+            w.inv_cont = None
             w.cap_gen += 1
             self._at(self.now + self.usable_s,
                      lambda gen=w.cap_gen: self._cap_fire(w, gen))
@@ -305,16 +445,33 @@ class EventEngine:
 
     def _close_invocation(self, w: _WorkerState):
         rec = w.inv_rec
-        recs = self.platform.finish(rec, self.memory_mb, self.now)
+        mem = self.mem[w.wid]
+        recs = self.platform.finish(rec, mem, self.now)
         for r in recs:
-            self._gb_seconds += self.memory_mb / 1024.0 * (r.end - r.start)
+            self._gb_seconds += mem / 1024.0 * (r.end - r.start)
             self._requests += 1
         w.inv_rec = None
+        w.inv_gen += 1                           # stale any init-window event
         w.cap_gen += 1                           # disarm the cap timer
+
+    def _detach_transfer(self, tr: _Transfer):
+        """Remove a transfer from its link (setup or flow phase) and fix
+        the sync-window counter. The transfer keeps its progress."""
+        tr.token += 1                            # cancel pending setup
+        link = tr.link
+        if tr.fid in link.flows:                 # mid-flow
+            del link.flows[tr.fid]
+            self._reschedule(link)
+            tr.latency_left = 0.0
+        else:
+            link.setup -= 1
+        if tr.is_sync:
+            self._sync_active -= 1
 
     def _pause_activity(self, w: _WorkerState):
         """Capture whatever the worker is doing as a resumable pending
-        continuation (duration-cap or failure preemption)."""
+        continuation (duration-cap preemption keeps progress: the work up
+        to the checkpoint is durable)."""
         act = w.activity
         w.activity = None
         if act is None:
@@ -327,16 +484,7 @@ class EventEngine:
             w.pending = lambda: self._do_compute(w, remaining, cont)
         elif kind == "transfer":
             _, tr, _cont = act
-            tr.token += 1                        # cancel pending setup
-            link = tr.link
-            if tr.fid in link.flows:             # mid-flow: keep the bytes
-                del link.flows[tr.fid]
-                self._reschedule(link)
-                tr.latency_left = 0.0
-            else:
-                link.setup -= 1
-            if tr.is_sync:
-                self._sync_active -= 1
+            self._detach_transfer(tr)
             w.pending = lambda: self._resume_transfer(w, tr)
 
     def _resume_transfer(self, w: _WorkerState, tr: _Transfer):
@@ -384,6 +532,59 @@ class EventEngine:
 
         self._begin_invocation(w, self.init_s + self.restore_s, resume,
                                resumed=True)
+
+    # -- correlated (shock) failures -----------------------------------------
+    def _schedule_next_shock(self):
+        dt = float(self._shock_rng.exponential(self.shocks.interval_s))
+        self._at(self.now + max(dt, 1e-9), self._shock_fire)
+
+    def _shock_fire(self):
+        """One shared shock: every eligible in-flight worker of the target
+        tier dies with probability ``kill_frac`` — a correlated burst, not
+        n independent coin flips spread over iterations."""
+        if self._stopping or all(w.finished for w in self._workers):
+            return                               # epoch over: stop the process
+        killed = 0
+        for w in self._workers:
+            tier = self.fleet.workers[w.wid].tier
+            if self.shocks.tier is not None and tier != self.shocks.tier:
+                continue
+            u = float(self._shock_rng.random_sample())
+            if u < self.shocks.kill_frac and self._shock_kill(w):
+                killed += 1
+        if killed:
+            self._shock_events += 1
+        self._schedule_next_shock()
+
+    def _shock_kill(self, w: _WorkerState) -> bool:
+        """Kill one worker mid-flight: unlike a duration-cap preemption the
+        in-flight work is *lost* — compute restarts from the iteration
+        boundary, a partial transfer re-sends from byte 0."""
+        if w.finished or w.restarting:
+            return False                         # nothing running to kill
+        self._failures += 1
+        self._tr(w, "shock-fail")
+        act = w.activity
+        w.activity = None
+        if act is None:
+            if w.inv_cont is not None:
+                # died inside the init window: redo the owed continuation
+                w.pending = w.inv_cont
+            # else: waiting at a barrier/gate — the release will deliver
+        elif act[0] == "compute":
+            w.seg_gen += 1
+            w.pending = lambda: self._compute_phase(w)
+        else:                                    # transfer: bytes are lost
+            _, tr, _cont = act
+            self._detach_transfer(tr)
+            tr.remaining_gb = tr.total_gb
+            tr.latency_left = tr.setup_latency_s
+            w.pending = lambda: self._resume_transfer(w, tr)
+        self._close_invocation(w)
+        self.object_store.put(f"ckpt/w{w.wid}", {"iter": w.it},
+                              nbytes=self.ckpt_bytes)
+        self._restart(w)
+        return True
 
     # -- synchronization -----------------------------------------------------
     def _barrier(self, key: Tuple, w: _WorkerState, cont: Callable):
@@ -453,7 +654,7 @@ class EventEngine:
         if (self.slowdown_at_iter is not None
                 and w.it >= self.slowdown_at_iter):
             factor *= self.slowdown_factor
-        d = self.base_compute_s * factor
+        d = self.base_compute_s[w.wid] * factor
         fail_u = float(w.rng.random_sample())
         if fail_u < self.failure_rate:
             frac = float(w.rng.random_sample())
@@ -519,39 +720,53 @@ class EventEngine:
             self._wall = self.now    # stale timer events may pop later
 
     # -- run -----------------------------------------------------------------
-    def run(self) -> EngineResult:
+    def _start(self):
+        if self._started:
+            return
+        self._started = True
         for w in self._workers:
             self._start_worker(w)
-        links = list(self.links.values())
-        while self._q:
-            t, _, fn = heapq.heappop(self._q)
-            if t > self.now:
-                if self._sync_active > 0:
-                    self._sync_busy += t - self.now
-                for link in links:
-                    link.progress(t)
-                self.now = t
-            fn()
+        if self.shocks is not None:
+            self._schedule_next_shock()
+
+    def _check_complete(self):
         unfinished = [w.wid for w in self._workers if not w.finished]
         if unfinished:
             raise RuntimeError(f"event engine deadlock: workers {unfinished} "
                                f"never finished (mode={self.mode})")
 
+    def run(self) -> EngineResult:
+        """Run this engine's domain to completion and return this engine's
+        result. (In a shared domain this runs *every* registered engine —
+        the clock is shared; prefer ``domain.run()`` + ``engine.result()``
+        for multi-job setups.)"""
+        self.domain.run()
+        return self.result()
+
+    def result(self) -> EngineResult:
+        if self._result is not None:
+            return self._result
+        self._check_complete()
         sync_s = self._sync_busy
-        self.param_store.keep_alive(sync_s)
+        # billing basis: this job's share of the store's keep-alive union
+        # (identical to sync_s unless the store is shared across jobs)
+        billed_s = self.domain.store_keep_alive_share(self)
+        self.param_store.keep_alive(billed_s)
         lambda_usd = (self._gb_seconds * LAMBDA_GB_SECOND
                       + self._requests * LAMBDA_PER_REQUEST)
         store_hourly = (self.param_store.vcpus * ECS_VCPU_HOUR
                         + self.param_store.memory_gb * ECS_GB_HOUR)
         n_objects = max(math.ceil(self.w.sample_bytes * self.samples
                                   / DATA_OBJECT_BYTES), 1)
-        store_usd = (sync_s / 3600.0 * store_hourly
+        store_usd = (billed_s / 3600.0 * store_hourly
                      + n_objects * S3_GET_PER_1K / 1000.0 * self.n)
-        return EngineResult(
+        self._result = EngineResult(
             wall_s=self._wall, lambda_usd=lambda_usd, store_usd=store_usd,
             iters_done=self._g_done,
             samples_done=min(self._g_done * self.global_batch, self.samples),
-            sync_s=sync_s, restarts=self._cap_restarts,
+            sync_s=sync_s, store_billed_s=billed_s,
+            restarts=self._cap_restarts,
             failures=self._failures, invocations=self._requests,
             iter_times=self._iter_times, stopped_early=self._stopping,
-            trace=self._trace)
+            trace=self._trace, shock_events=self._shock_events)
+        return self._result

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -43,6 +43,103 @@ def fn_gflops(memory_mb: float) -> float:
 def fn_net_gbps(memory_mb: float) -> float:
     """Per-function network bandwidth (GB/s) — scales with memory, capped."""
     return PEAK_NET_GBPS * min(1.0, memory_mb / 10_240 * 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerSpec:
+    """One function slot of a (possibly heterogeneous) fleet. Compute and
+    network derive from ``memory_mb`` (``fn_gflops`` / ``fn_net_gbps``);
+    ``tier`` labels the capacity pool (e.g. "spot" slots can be targeted by
+    a correlated-failure ``ShockModel``)."""
+    memory_mb: float
+    tier: str = "standard"
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """Per-worker deployment of one job: a tuple of ``WorkerSpec``s.
+
+    ``FleetSpec.homogeneous(n, mem)`` reproduces the classic
+    ``(n_workers, memory_mb)`` deployment exactly; mixed fleets give each
+    worker its own compute rate, network cap, and GB-second billing rate.
+    """
+    workers: Tuple[WorkerSpec, ...]
+
+    def __post_init__(self):
+        if not self.workers:
+            raise ValueError("FleetSpec needs at least one worker")
+
+    def __len__(self) -> int:
+        return len(self.workers)
+
+    @classmethod
+    def homogeneous(cls, n: int, memory_mb: float,
+                    tier: str = "standard") -> "FleetSpec":
+        return cls(tuple(WorkerSpec(memory_mb, tier) for _ in range(n)))
+
+    @classmethod
+    def mixed(cls, groups: Sequence[Tuple[int, float, str]]) -> "FleetSpec":
+        """``groups``: (count, memory_mb, tier) per tier, concatenated in
+        order (worker ids are assigned group by group)."""
+        specs: List[WorkerSpec] = []
+        for count, mem, tier in groups:
+            specs.extend(WorkerSpec(mem, tier) for _ in range(count))
+        return cls(tuple(specs))
+
+    @property
+    def memories(self) -> Tuple[float, ...]:
+        return tuple(w.memory_mb for w in self.workers)
+
+    @property
+    def total_memory_mb(self) -> float:
+        return sum(self.memories)
+
+    @property
+    def is_homogeneous(self) -> bool:
+        return len(set(self.memories)) == 1
+
+    def gflops_harmonic(self) -> float:
+        """Weighted-harmonic effective per-worker compute rate: with equal
+        local batches the *mean* iteration compute time equals the time at
+        this rate (exact in the identical-memory limit)."""
+        return len(self) / sum(1.0 / fn_gflops(m) for m in self.memories)
+
+    def min_net_gbps(self) -> float:
+        """Sync bound for the analytic approximation: a barriered exchange
+        completes no faster than the narrowest worker's pipe."""
+        return min(fn_net_gbps(m) for m in self.memories)
+
+
+def fleet_from_config(workers: int, memory_mb: float, small_frac: float = 0.0,
+                      small_memory_ratio: float = 0.5) -> FleetSpec:
+    """The Bayesian optimizer's searchable fleet composition: a fraction
+    ``small_frac`` of the fleet runs at ``memory_mb * small_memory_ratio``
+    (tier "small"), the rest at full memory (tier "standard")."""
+    n_small = int(round(workers * small_frac))
+    n_small = min(max(n_small, 0), workers)
+    small_mb = max(memory_mb * small_memory_ratio, LAMBDA_MIN_MEMORY_MB)
+    return FleetSpec.mixed([(workers - n_small, memory_mb, "standard"),
+                            (n_small, small_mb, "small")]
+                           if n_small else [(workers, memory_mb, "standard")])
+
+
+@dataclasses.dataclass(frozen=True)
+class ShockModel:
+    """Correlated (spot-style) failure process: shared shocks arrive as a
+    Poisson process with mean inter-arrival ``interval_s``; at each shock
+    every in-flight worker of the targeted ``tier`` (None = all tiers) dies
+    independently with probability ``kill_frac`` — so one shock can kill a
+    random subset of the fleet at once, unlike the per-iteration
+    independent ``failure_rate``."""
+    interval_s: float
+    kill_frac: float = 0.5
+    tier: Optional[str] = None
+
+    def __post_init__(self):
+        if self.interval_s <= 0:
+            raise ValueError("shock interval_s must be positive")
+        if not 0.0 <= self.kill_frac <= 1.0:
+            raise ValueError("shock kill_frac must be in [0, 1]")
 
 
 @dataclasses.dataclass

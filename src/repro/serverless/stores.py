@@ -38,9 +38,14 @@ class SharedLink:
     The analytic model divides a store's aggregate bandwidth by a static
     ``concurrent=n``; here, transfers that *actually overlap in time* share
     the link: each of k concurrent flows progresses at
-    ``min(per_stream, aggregate / k)`` GB/s, re-evaluated whenever a flow
-    joins or leaves. (Keep-alive billing is the engine's job: it tracks the
-    union of time gradient-sync transfers are outstanding, across links.)"""
+    ``min(flow cap, aggregate / k)`` GB/s, re-evaluated whenever a flow
+    joins or leaves. A flow's cap defaults to the link's ``per_stream_gbps``
+    but a transfer may carry its own ``cap_gbps`` (heterogeneous fleets:
+    each worker's function-network limit). One link may be shared by
+    *several* engines in a ``ContentionDomain`` — cross-job transfers then
+    slow each other by their actual overlap. (Keep-alive billing is the
+    engine's job: it tracks the union of time gradient-sync transfers are
+    outstanding, across links.)"""
 
     def __init__(self, name: str, aggregate_gbps: float,
                  per_stream_gbps: float, latency_s: float):
@@ -53,21 +58,26 @@ class SharedLink:
         self.generation = 0                  # bumped on any flow-set change
         self.last_t = 0.0
 
-    def rate(self) -> float:
+    def flow_rate(self, tr: Any) -> float:
         k = len(self.flows)
         if k == 0:
             return 0.0
-        return min(self.per_stream_gbps, self.aggregate_gbps / k)
+        cap = getattr(tr, "cap_gbps", None) or self.per_stream_gbps
+        return min(cap, self.aggregate_gbps / k)
+
+    def next_completion_dt(self) -> float:
+        """Time until the first flow drains at the current per-flow rates."""
+        return min(tr.remaining_gb / self.flow_rate(tr)
+                   for tr in self.flows.values())
 
     def progress(self, now: float):
-        """Advance all flows to ``now`` at the rate that held since the last
-        flow-set change (rates only change when the set changes)."""
+        """Advance all flows to ``now`` at the rates that held since the
+        last flow-set change (rates only change when the set changes)."""
         dt = now - self.last_t
-        if dt > 0:
-            r = self.rate()
-            if r > 0:
-                for tr in self.flows.values():
-                    tr.remaining_gb = max(tr.remaining_gb - r * dt, 0.0)
+        if dt > 0 and self.flows:
+            for tr in self.flows.values():
+                r = self.flow_rate(tr)
+                tr.remaining_gb = max(tr.remaining_gb - r * dt, 0.0)
         self.last_t = now
 
 

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serverless.platform import fn_gflops, fn_net_gbps
+from repro.serverless.platform import FleetSpec, fn_gflops, fn_net_gbps
 from repro.serverless.stores import ObjectStore, ParamStore
 
 # ---------------------------------------------------------------------------
@@ -133,11 +133,18 @@ def comm_breakdown(scheme: str, grad_bytes: float, n_workers: int,
                    object_store: ObjectStore,
                    n_shards: Optional[int] = None,
                    extra_upload_bytes: float = 0.0,
-                   topk_ratio: float = 0.05) -> Dict[str, float]:
+                   topk_ratio: float = 0.05,
+                   fn_net_override_gbps: Optional[float] = None
+                   ) -> Dict[str, float]:
     """Static per-phase times: every phase is assumed to run with all n
-    workers contending (the event engine relaxes this to *actual* overlap)."""
+    workers contending (the event engine relaxes this to *actual* overlap).
+    ``fn_net_override_gbps`` replaces the memory-derived per-function
+    bandwidth — the mixed-fleet approximation passes the *narrowest*
+    worker's pipe (a barriered exchange is bound by it)."""
     n = n_workers
-    fn_bw = fn_net_gbps(memory_mb) * 8  # not a bottleneck vs store; keep wide
+    fn_net = (fn_net_override_gbps if fn_net_override_gbps is not None
+              else fn_net_gbps(memory_mb))
+    fn_bw = fn_net * 8  # not a bottleneck vs store; keep wide
     out: Dict[str, float] = {}
     for ph in comm_plan(scheme, grad_bytes, n, n_shards=n_shards,
                         extra_upload_bytes=extra_upload_bytes,
@@ -154,12 +161,26 @@ def comm_breakdown(scheme: str, grad_bytes: float, n_workers: int,
 
 def iteration_time(w: Workload, scheme: str, n_workers: int, memory_mb: float,
                    global_batch: int, param_store: ParamStore,
-                   object_store: ObjectStore) -> Dict[str, float]:
+                   object_store: ObjectStore, *,
+                   fleet: Optional[FleetSpec] = None) -> Dict[str, float]:
+    """Closed-form per-iteration time. With a ``fleet``, the mixed-memory
+    approximation the Bayesian optimizer probes with: compute at the
+    weighted-harmonic per-worker rate (exact for identical memories),
+    synchronization at the min-bandwidth bound (narrowest worker's pipe).
+    """
+    n_workers = len(fleet) if fleet is not None else n_workers
     local_batch = max(global_batch // n_workers, 1)
+    if fleet is None:
+        comp = compute_time(w, local_batch, memory_mb)
+        net_override = None
+    else:
+        comp = w.flops_per_sample * local_batch / (fleet.gflops_harmonic()
+                                                   * 1e9)
+        net_override = fleet.min_net_gbps()
     comm = comm_breakdown(scheme, w.grad_bytes, n_workers, memory_mb,
                           param_store, object_store,
-                          extra_upload_bytes=w.extra_upload_bytes)
-    comp = compute_time(w, local_batch, memory_mb)
+                          extra_upload_bytes=w.extra_upload_bytes,
+                          fn_net_override_gbps=net_override)
     return {"compute": comp, "comm": sum(comm.values()),
             "total": comp + sum(comm.values()), **comm}
 

@@ -1,0 +1,197 @@
+"""Property-based invariants of the discrete-event engine.
+
+For *any* valid configuration — scheme, fleet shape, sync mode, straggler
+variance, independent failures, correlated shocks — the engine must keep
+its bookkeeping honest:
+
+  - trace timestamps are non-decreasing (events execute in time order);
+  - ``invocations == n + cap_restarts + failure_restarts`` (every worker
+    is one Lambda request, every restart of either kind is one more);
+  - ``lambda_usd`` is exactly the GB-second formula over the platform's
+    invocation records, and ``store_usd`` exactly the keep-alive +
+    S3-GET formula;
+  - every iteration a worker starts is eventually stepped, and every
+    worker finishes the full epoch;
+  - same-seed runs are bit-identical (trace, wall, cost).
+
+Runs under real hypothesis when installed, else the deterministic
+``hypothesis_fallback`` shim (endpoints first, then seeded draws).
+"""
+import math
+import pathlib
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # optional dep
+    from hypothesis_fallback import given, settings, st
+
+from repro.serverless import (WORKLOADS, ContentionDomain, EventEngine,
+                              FleetSpec, ObjectStore, ParamStore,
+                              ServerlessPlatform, ShockModel)
+from repro.serverless.platform import (DATA_OBJECT_BYTES, LAMBDA_GB_SECOND,
+                                       LAMBDA_PER_REQUEST)
+from repro.serverless.stores import ECS_GB_HOUR, ECS_VCPU_HOUR, S3_GET_PER_1K
+
+W = WORKLOADS["resnet18"]
+BATCH = 512
+SAMPLES = 3 * BATCH                      # 3 iterations: fast but non-trivial
+
+
+def _build(scheme, n, mem, sigma, failure_rate, sync_mode, hetero, shocked,
+           seed):
+    plat = ServerlessPlatform(seed=0)
+    fleet = None
+    if hetero:                           # half the fleet at half memory
+        fleet = FleetSpec.mixed([(n - n // 2, mem, "standard"),
+                                 (n // 2, max(mem // 2, 512), "small")])
+    shocks = ShockModel(interval_s=40.0, kill_frac=0.4) if shocked else None
+    eng = EventEngine(W, scheme, n, mem, BATCH, ParamStore(), ObjectStore(),
+                      samples=SAMPLES, straggler_sigma=sigma,
+                      failure_rate=failure_rate, sync_mode=sync_mode,
+                      fleet=fleet, shocks=shocks, platform=plat, seed=seed)
+    return eng, plat
+
+
+def _check_invariants(eng, plat, r):
+    n = eng.n
+    # (1) trace timestamps never go backwards
+    times = [float(line.split()[0]) for line in r.trace]
+    assert all(a <= b for a, b in zip(times, times[1:])), "time went backwards"
+
+    # (2) request accounting: one per worker + one per restart of any kind
+    assert r.invocations == n + r.restarts + r.failures
+
+    # (3) cost is exactly the published formulas
+    gb_s = sum(eng.mem[rec.worker_id] / 1024.0 * (rec.end - rec.start)
+               for rec in plat.invocations)
+    assert r.lambda_usd == pytest.approx(
+        gb_s * LAMBDA_GB_SECOND + r.invocations * LAMBDA_PER_REQUEST,
+        rel=1e-9)
+    ps = eng.param_store
+    hourly = ps.vcpus * ECS_VCPU_HOUR + ps.memory_gb * ECS_GB_HOUR
+    n_objects = max(math.ceil(W.sample_bytes * SAMPLES / DATA_OBJECT_BYTES), 1)
+    assert r.store_usd == pytest.approx(
+        r.store_billed_s / 3600.0 * hourly
+        + n_objects * S3_GET_PER_1K / 1000.0 * n, rel=1e-9)
+    # alone on its store, a job is billed exactly its own sync window
+    if all(e.param_store is not eng.param_store
+           for e in eng.domain._engines if e is not eng):
+        assert r.store_billed_s == r.sync_s
+    assert r.cost_usd == r.lambda_usd + r.store_usd
+
+    # (4) every started iteration completes, and the whole epoch ran
+    iters = max(math.ceil(SAMPLES / BATCH), 1)
+    assert not r.stopped_early
+    assert r.iters_done == iters
+    stepped = {}
+    for line in r.trace:
+        _, wid, what = line.split(" ", 2)
+        if what.startswith("step it"):
+            stepped.setdefault(wid, set()).add(int(what[len("step it"):]))
+        elif what.startswith("compute it"):
+            pass                         # may repeat after a failure/shock
+    for wid, steps in stepped.items():
+        assert steps == set(range(iters)), (wid, steps)
+    assert len(stepped) == n
+    for line in r.trace:
+        _, wid, what = line.split(" ", 2)
+        if what.startswith("compute it"):
+            assert int(what[len("compute it"):]) in stepped[wid]
+
+
+@settings(max_examples=12, deadline=None, derandomize=True)
+@given(scheme=st.sampled_from(("hier", "ps", "ps_s3")),
+       n=st.integers(2, 10),
+       mem=st.sampled_from((1024, 2048, 4096)),
+       sigma=st.sampled_from((0.0, 0.3, 0.6)),
+       failure_rate=st.sampled_from((0.0, 0.04)),
+       sync_mode=st.sampled_from(("bsp", "ssp(1)", "async")),
+       hetero=st.sampled_from((False, True)),
+       shocked=st.sampled_from((False, True)),
+       seed=st.integers(0, 9999))
+def test_engine_invariants_hold_for_random_configs(
+        scheme, n, mem, sigma, failure_rate, sync_mode, hetero, shocked,
+        seed):
+    eng, plat = _build(scheme, n, mem, sigma, failure_rate, sync_mode,
+                       hetero, shocked, seed)
+    r = eng.run()
+    _check_invariants(eng, plat, r)
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(scheme=st.sampled_from(("hier", "ps")),
+       n=st.integers(2, 8),
+       sigma=st.sampled_from((0.0, 0.5)),
+       shocked=st.sampled_from((False, True)),
+       seed=st.integers(0, 9999))
+def test_same_seed_runs_are_bit_identical(scheme, n, sigma, shocked, seed):
+    runs = []
+    for _ in range(2):
+        eng, _plat = _build(scheme, n, 2048, sigma, 0.03, "bsp", True,
+                            shocked, seed)
+        runs.append(eng.run())
+    a, b = runs
+    assert a.trace == b.trace
+    assert a.wall_s == b.wall_s
+    assert a.lambda_usd == b.lambda_usd and a.store_usd == b.store_usd
+    assert a.invocations == b.invocations and a.failures == b.failures
+
+
+def test_multi_job_domain_preserves_per_job_invariants():
+    """Two jobs co-simulated on one shared ParamStore: each job's
+    bookkeeping must hold exactly as if it ran alone, and sharing the
+    link can only slow a job down, never speed it up."""
+    def solo(seed):
+        eng, plat = _build("ps", 6, 2048, 0.2, 0.0, "bsp", False, False,
+                           seed)
+        return eng.run()
+
+    iso = [solo(0), solo(1)]
+    shared_ps = ParamStore()
+    dom = ContentionDomain()
+    plats = [ServerlessPlatform(seed=0), ServerlessPlatform(seed=0)]
+    engs = [EventEngine(W, "ps", 6, 2048, BATCH, shared_ps, ObjectStore(),
+                        samples=SAMPLES, straggler_sigma=0.2, seed=i,
+                        platform=plats[i], domain=dom)
+            for i in range(2)]
+    dom.run()
+    for i, eng in enumerate(engs):
+        r = eng.result()
+        _check_invariants(eng, plats[i], r)
+        assert r.wall_s >= iso[i].wall_s - 1e-9
+    # the union keep-alive window never exceeds the per-job sum and never
+    # undershoots the longest single window
+    sync = [e.result().sync_s for e in engs]
+    assert max(sync) - 1e-9 <= dom.sync_union_s <= sum(sync) + 1e-9
+    # billing splits exactly the union (no double-billed overlap): the
+    # per-job shares sum to what the shared container is actually alive
+    billed = [e.result().store_billed_s for e in engs]
+    assert sum(billed) == pytest.approx(dom.sync_union_s, rel=1e-9)
+    assert shared_ps.alive_seconds == pytest.approx(dom.sync_union_s,
+                                                    rel=1e-9)
+
+
+# -- golden trace regression -------------------------------------------------
+
+GOLDEN = pathlib.Path(__file__).parent / "golden_engine_trace.txt"
+
+
+def _golden_engine():
+    return EventEngine(WORKLOADS["resnet18"], "hier", 2, 2048, 512,
+                       ParamStore(), ObjectStore(), samples=1024,
+                       straggler_sigma=0.3, seed=42)
+
+
+def test_golden_trace_reproduced_verbatim():
+    """The checked-in trace (seed 42, 2 workers, 2 iterations) must be
+    reproduced byte-for-byte, twice in a row — engine edits that reorder
+    events or change a timestamp fail loudly here, not silently."""
+    a = _golden_engine().run()
+    b = _golden_engine().run()
+    text_a = "\n".join(a.trace) + "\n"
+    text_b = "\n".join(b.trace) + "\n"
+    assert text_a == text_b                      # byte-stable across runs
+    assert text_a == GOLDEN.read_text()          # and across engine edits

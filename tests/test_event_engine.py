@@ -9,8 +9,9 @@ import pytest
 
 from repro.core import Config, ConfigSpace, EpochPlan, Goal, TaskScheduler
 from repro.core.cost_model import epoch_estimate
-from repro.serverless import (WORKLOADS, EventEngine, LocalWorkerPool,
-                              ObjectStore, ParamStore, ServerlessPlatform)
+from repro.serverless import (WORKLOADS, EventEngine, FleetSpec,
+                              LocalWorkerPool, ObjectStore, ParamStore,
+                              ServerlessPlatform, ShockModel)
 from repro.serverless.platform import InvocationRecord
 
 W = WORKLOADS["bert-small"]
@@ -48,6 +49,28 @@ def test_zero_variance_matches_analytic(name, scheme, n, mem, batch, samples):
     assert r.wall_s == pytest.approx(est.wall_s, rel=0.01)
     assert r.cost_usd == pytest.approx(est.cost_usd, rel=0.01)
     assert r.iters_done == est.iters
+
+
+@pytest.mark.parametrize("name,scheme,n,mem,batch,samples", CASES)
+def test_identical_fleet_matches_homogeneous_and_analytic(name, scheme, n,
+                                                          mem, batch,
+                                                          samples):
+    """A heterogeneous fleet whose workers are all *identical* is the
+    homogeneous deployment: the engine must reproduce the homogeneous
+    engine bit-for-bit and the (fleet-aware) epoch_estimate within 1% in
+    the zero-variance bsp limit."""
+    w = WORKLOADS[name]
+    fleet = FleetSpec.homogeneous(n, mem)
+    est = epoch_estimate(w, scheme, Config(n, mem), batch, ParamStore(),
+                         ObjectStore(), samples=samples, fleet=fleet)
+    homog = engine(w, scheme, n, mem, batch, samples, seed=0).run()
+    r = engine(w, scheme, n, mem, batch, samples, seed=0, fleet=fleet).run()
+    assert r.wall_s == homog.wall_s
+    assert r.lambda_usd == homog.lambda_usd
+    assert r.store_usd == homog.store_usd
+    assert r.trace == homog.trace
+    assert r.wall_s == pytest.approx(est.wall_s, rel=0.01)
+    assert r.cost_usd == pytest.approx(est.cost_usd, rel=0.01)
 
 
 def test_zero_variance_matches_with_duration_cap_restarts():
@@ -142,6 +165,34 @@ def test_engine_invocations_match_lambda_semantics():
     r = engine(w=WORKLOADS["bert-medium"], n=4, mem=2048, batch=512,
                samples=60_000, seed=0).run()
     assert r.invocations == 4 + r.restarts       # 1 per worker + 1 per restart
+
+
+def test_engine_billing_parity_with_platform_ledger():
+    """Satellite: EngineResult's Lambda bill and the ServerlessPlatform
+    ledger (which charges per invocation record as they close) must agree
+    on a run with both cap-restarts and failures — the two billing paths
+    can never drift apart."""
+    plat = ServerlessPlatform(seed=0)
+    r = engine(w=WORKLOADS["bert-medium"], n=4, mem=2048, batch=512,
+               samples=60_000, seed=1, failure_rate=0.03,
+               platform=plat).run()
+    assert r.restarts > 0 and r.failures > 0     # both paths exercised
+    assert plat.ledger.requests == r.invocations
+    assert plat.ledger.lambda_cost == pytest.approx(r.lambda_usd, rel=1e-9)
+
+
+def test_engine_billing_parity_hetero_fleet_with_shocks():
+    """Billing parity must survive per-worker memory rates and correlated
+    shock kills (each billed at the dead worker's own memory)."""
+    plat = ServerlessPlatform(seed=0)
+    fleet = FleetSpec.mixed([(3, 3072, "standard"), (3, 1536, "spot")])
+    r = engine(n=6, mem=3072, batch=512, samples=4_096, seed=2,
+               fleet=fleet, platform=plat,
+               shocks=ShockModel(interval_s=60.0, kill_frac=0.5,
+                                 tier="spot")).run()
+    assert r.failures > 0 and r.shock_events > 0
+    assert plat.ledger.requests == r.invocations == 6 + r.restarts + r.failures
+    assert plat.ledger.lambda_cost == pytest.approx(r.lambda_usd, rel=1e-9)
 
 
 # -- mid-epoch adaptation ----------------------------------------------------

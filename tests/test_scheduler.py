@@ -108,3 +108,62 @@ def test_profile_cost_positive_and_small():
     assert t > 0 and usd > 0
     est = epoch_estimate(w, "hier", c, 1024, ParamStore(), ObjectStore())
     assert usd < est.cost_usd  # profiling an epoch costs less than the epoch
+
+
+# -- fleet composition + ssp-aware objective ---------------------------------
+
+def test_staleness_inflation_ordering():
+    """bsp pays no penalty; ssp grows with k; async is judged at the
+    worst-case n-1 staleness — the objective ordering the optimizer sees."""
+    from repro.core.constraints import staleness_inflation
+    n = 16
+    bsp = staleness_inflation("bsp", n_workers=n)
+    ssp2 = staleness_inflation("ssp(2)", n_workers=n)
+    ssp8 = staleness_inflation("ssp(8)", n_workers=n)
+    asy = staleness_inflation("async", n_workers=n)
+    assert bsp == 1.0
+    assert bsp < ssp2 < ssp8 < asy
+    g = Goal("min_cost_deadline", deadline_s=100.0)
+    obj, cons, _ = g.objective_and_constraint(50.0, 5.0, inflation=ssp2)
+    assert obj == pytest.approx(5.0 * ssp2)
+    assert cons == pytest.approx(50.0 * ssp2)
+
+
+def test_fleet_config_estimate_and_search_space():
+    """A searched fleet mix (small_frac) expands to a mixed fleet: cheaper
+    GB-seconds than the all-big fleet, slower iterations; and a
+    search_fleet space actually samples mixed candidates."""
+    w = WORKLOADS["bert-small"]
+    full = epoch_estimate(w, "hier", Config(16, 4096), 1024, ParamStore(),
+                          ObjectStore(), samples=20_000)
+    mixed = epoch_estimate(w, "hier", Config(16, 4096, small_frac=0.5), 1024,
+                           ParamStore(), ObjectStore(), samples=20_000)
+    assert mixed.wall_s > full.wall_s            # slow tier drags the epoch
+    # the mixed fleet bills less memory per second
+    assert (mixed.lambda_usd / mixed.wall_s) < (full.lambda_usd / full.wall_s)
+    space = ConfigSpace(max_workers=32, search_fleet=True)
+    cands = space.sample(np.random.RandomState(0), 64)
+    fracs = {c.small_frac for c in cands}
+    assert fracs == set(space.small_frac_choices)
+    assert all(len(c.as_unit(space)) == 3 for c in cands)
+
+
+def test_scheduler_deploys_searched_fleet_on_event_engine():
+    """engine='event' + a config with small_frac must execute the epoch on
+    the mixed fleet (per-worker billing at both memory sizes)."""
+    plat = ServerlessPlatform(seed=0)
+    sched = TaskScheduler(plat, ObjectStore(), ParamStore(), seed=0,
+                          space=ConfigSpace(max_workers=64,
+                                            search_fleet=True),
+                          engine="event")
+    res = sched.run([EpochPlan(1024, W, samples=10_000)], Goal("min_time"),
+                    adaptive=False,
+                    fixed_config=Config(16, 4096, small_frac=0.5))
+    assert res.epochs_done == 1
+    assert len({rec.worker_id for rec in plat.invocations}) == 16
+    # had the fleet silently deployed homogeneous at 4096MB, the ledger
+    # would bill every invocation second at 4096 — the mixed fleet bills
+    # half the workers at 2048, so the GB-seconds must come in well under
+    homog_gb = sum(4096 / 1024.0 * (rec.end - rec.start)
+                   for rec in plat.invocations)
+    assert plat.ledger.gb_seconds < 0.95 * homog_gb
