@@ -14,12 +14,13 @@ OUT_DIR = "experiments/bench"
 
 def fresh_scheduler(scheme: str = "hier", seed: int = 0, max_workers: int = 200,
                     failure_rate: float = 0.0, search_fleet: bool = False,
-                    **scheduler_kw):
+                    search_comm: bool = False, **scheduler_kw):
     plat = ServerlessPlatform(failure_rate=failure_rate, seed=seed)
     os_, ps = ObjectStore(), ParamStore()
     sched = TaskScheduler(plat, os_, ps, scheme=scheme,
                           space=ConfigSpace(max_workers=max_workers,
-                                            search_fleet=search_fleet),
+                                            search_fleet=search_fleet,
+                                            search_comm=search_comm),
                           seed=seed, **scheduler_kw)
     return sched, plat, os_, ps
 

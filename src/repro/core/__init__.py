@@ -1,5 +1,7 @@
 """SMLT's primary contribution: adaptive serverless ML training.
 
+ - comm:        CommPlan IR — the communication schedule as a typed,
+                transformable phase DAG shared by every cost layer
  - hier_sync:   hierarchical model synchronization on JAX collectives
  - bayes_opt:   GP + Expected Improvement deployment optimizer
  - scheduler:   training-dynamics-aware task scheduler
@@ -9,6 +11,8 @@
 """
 from repro.core.bayes_opt import (  # noqa: F401
     GP, BayesianOptimizer, Config, ConfigSpace, expected_improvement)
+from repro.core.comm import (  # noqa: F401
+    CommPhase, CommPlan, CommSpec, build_plan)
 from repro.core.constraints import Goal  # noqa: F401
 from repro.core.hier_sync import (  # noqa: F401
     STRATEGIES, allreduce_mean, make_sync_grad_fn, ps_mean,

@@ -73,15 +73,26 @@ def expected_improvement(mu, sigma, y_best):
 
 @dataclasses.dataclass(frozen=True)
 class Config:
-    """One deployment configuration C_i = <workers, memory[, fleet mix]>.
+    """One deployment configuration
+    C_i = <workers, memory[, fleet mix][, comm plan]>.
 
     ``small_frac`` is the searchable fleet-composition dimension: the
     fraction of the fleet deployed as a cheaper half-memory "small" tier
     (see ``repro.serverless.platform.fleet_from_config``). 0.0 keeps the
-    paper's homogeneous 2-D space."""
+    paper's homogeneous 2-D space.
+
+    ``comm``/``compress_ratio``/``branching`` are the searchable
+    communication-plan dimensions (``repro.core.comm.CommSpec``): the
+    aggregation strategy ("" keeps the scheduler's default scheme), the
+    top-k wire ratio (1.0 = dense), and the hier tree fan-in (0 = n/a)."""
     workers: int
     memory_mb: int
     small_frac: float = 0.0
+    comm: str = ""                     # "" | "ps" | "scatter_reduce" | "hier"
+    compress_ratio: float = 1.0
+    branching: int = 0
+
+    _COMM_IDX = ("", "ps", "scatter_reduce", "hier")
 
     def as_unit(self, space: "ConfigSpace") -> np.ndarray:
         return np.array([
@@ -90,6 +101,12 @@ class Config:
             (self.memory_mb - space.min_memory)
             / max(space.max_memory - space.min_memory, 1),
             self.small_frac,
+            self._COMM_IDX.index(self.comm)
+            / (len(self._COMM_IDX) - 1),
+            # ratio on a log scale: 1.0 -> 0, 0.01 -> 1
+            min(math.log10(1.0 / max(self.compress_ratio, 1e-4)) / 2.0, 1.0),
+            0.0 if self.branching <= 0 else min(
+                math.log2(self.branching) / 4.0, 1.0),
         ])
 
 
@@ -105,6 +122,14 @@ class ConfigSpace:
     # the bsp barrier cost of its slowest workers
     search_fleet: bool = False
     small_frac_choices: Tuple[float, ...] = (0.0, 0.25, 0.5)
+    # communication plan: when True, candidates also draw an aggregation
+    # strategy, a top-k compression ratio, and a hier-tree branching —
+    # the optimizer trades wire bytes against the convergence cost of
+    # sparsification (constraints.compression_inflation)
+    search_comm: bool = False
+    comm_choices: Tuple[str, ...] = ("scatter_reduce", "hier", "ps")
+    ratio_choices: Tuple[float, ...] = (1.0, 0.1, 0.05, 0.01)
+    branching_choices: Tuple[int, ...] = (2, 4, 8)
 
     def sample(self, rng: np.random.RandomState, n: int) -> List[Config]:
         ws = rng.randint(self.min_workers, self.max_workers + 1, size=n)
@@ -115,9 +140,18 @@ class ConfigSpace:
                   rng.randint(len(self.small_frac_choices), size=n)]
         else:
             fr = [0.0] * n
+        if self.search_comm:
+            cm = [self.comm_choices[i] for i in
+                  rng.randint(len(self.comm_choices), size=n)]
+            ra = [self.ratio_choices[i] for i in
+                  rng.randint(len(self.ratio_choices), size=n)]
+            br = [self.branching_choices[i] for i in
+                  rng.randint(len(self.branching_choices), size=n)]
+        else:
+            cm, ra, br = [""] * n, [1.0] * n, [0] * n
         return [Config(int(w), int(self.min_memory + m * self.memory_step),
-                       float(f))
-                for w, m, f in zip(ws, ms, fr)]
+                       float(f), c, float(r), int(b) if c == "hier" else 0)
+                for w, m, f, c, r, b in zip(ws, ms, fr, cm, ra, br)]
 
 
 @dataclasses.dataclass

@@ -12,11 +12,12 @@ to ~8·k (value + index), i.e. ratio/2 of dense for k = ratio·|G|.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+from repro.core.comm import CommSpec
+from repro.serverless.worker import LocalWorkerPool
 
 
 def topk_compress(flat: np.ndarray, ratio: float) -> Tuple[np.ndarray,
@@ -56,41 +57,16 @@ class ErrorFeedback:
         return idx, vals
 
 
-class CompressedWorkerPool:
-    """LocalWorkerPool variant: workers upload top-k sparse gradients with
-    error feedback; the aggregator sums sparse contributions. Uses the same
-    param store interfaces so bytes are accounted."""
+class CompressedWorkerPool(LocalWorkerPool):
+    """Back-compat shim, folded into ``LocalWorkerPool(plan=...)``: a
+    pool whose plan is a compressed central-store schedule — workers
+    upload top-k sparse gradients with error feedback and the aggregator
+    sums the sparse contributions (``LocalWorkerPool._step_compressed``).
+    At ``ratio=1.0`` the plan is dense and the pool degenerates to the
+    exact ps mean. Same param-store interfaces, so bytes are accounted."""
 
     def __init__(self, grad_fn, n_workers: int, param_store, *,
                  ratio: float = 0.05):
-        from repro.serverless.worker import flatten_grads, unflatten_grads
-        self._flatten = flatten_grads
-        self._unflatten = unflatten_grads
-        self.grad_fn = grad_fn
-        self.n = n_workers
-        self.store = param_store
+        super().__init__(grad_fn, n_workers, param_store,
+                         plan=CommSpec("ps", ratio=ratio))
         self.ratio = ratio
-        self._ef: Dict[int, ErrorFeedback] = {}
-
-    def step(self, params, global_batch):
-        n = self.n
-        size = None
-        g_like = None
-        for w in range(n):
-            sl = jax.tree.map(
-                lambda x: x[w * (x.shape[0] // n):(w + 1) * (x.shape[0] // n)],
-                global_batch)
-            g = self.grad_fn(params, sl)
-            flat = self._flatten(g)
-            size, g_like = len(flat), g
-            if w not in self._ef:
-                self._ef[w] = ErrorFeedback.init(size)
-            idx, vals = self._ef[w].compress(flat, self.ratio)
-            nbytes = compressed_bytes(size, self.ratio)
-            self.store.put(f"sparse/{w}", (idx, vals), nbytes=nbytes)
-        acc = np.zeros(size, np.float32)
-        for w in range(n):
-            idx, vals = self.store.get(
-                f"sparse/{w}", nbytes=compressed_bytes(size, self.ratio))
-            acc[idx] += vals
-        return self._unflatten(acc / n, g_like)

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 # Convergence cost of stale gradients, as a fractional increase in the
@@ -9,6 +10,26 @@ from typing import Optional
 # (SSP analyses bound the error term linearly in the staleness; MLLess-style
 # significance filters eat some of it, hence a small default slope).
 SSP_PENALTY_PER_STEP = 0.02
+
+# Convergence cost of top-k sparsification, as a fractional increase in
+# iterations per decade of compression (error feedback keeps top-k SGD at
+# the dense rate up to a residual term that grows as the keep ratio
+# shrinks — Stich et al.; a 100x compression pays ~2 decades).
+COMPRESSION_PENALTY_PER_DECADE = 0.08
+
+
+def compression_inflation(ratio: float,
+                          per_decade: float = COMPRESSION_PENALTY_PER_DECADE
+                          ) -> float:
+    """Multiplicative iteration-count inflation of a top-k keep ratio:
+    dense (ratio >= 1) pays none; smaller ratios pay per decade of
+    dropped mass. The Bayesian optimizer multiplies a candidate's
+    predicted time *and* cost by this (exactly as
+    ``staleness_inflation``), so a searched ``compress_ratio`` is judged
+    on convergence-inflated totals, not just its cheaper wire bytes."""
+    if ratio >= 1.0:
+        return 1.0
+    return 1.0 + per_decade * math.log10(1.0 / max(ratio, 1e-6))
 
 
 def staleness_inflation(sync_mode: str, staleness: int = 0,

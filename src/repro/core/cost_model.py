@@ -15,6 +15,7 @@ from repro.serverless.platform import (  # noqa: F401  (re-exported names)
     CHECKPOINT_RESTORE_S, DATA_OBJECT_BYTES, LAMBDA_GB_SECOND,
     LAMBDA_MAX_DURATION_S, LAMBDA_PER_REQUEST, FleetSpec, fleet_from_config)
 from repro.serverless.stores import ObjectStore, ParamStore
+from repro.core.comm import CommLike
 from repro.serverless.worker import Workload, iteration_time
 
 
@@ -51,7 +52,7 @@ class EpochEstimate:
             self.iters * self._gb / self.wall_s)
 
 
-def epoch_estimate(w: Workload, scheme: str, config: Config,
+def epoch_estimate(w: Workload, scheme: CommLike, config: Config,
                    global_batch: int, param_store: ParamStore,
                    object_store: ObjectStore, *,
                    framework_init_s: float = 4.0,
@@ -92,8 +93,12 @@ def epoch_estimate(w: Workload, scheme: str, config: Config,
     total_mem = fleet.total_memory_mb if fleet is not None else n * mem
     lambda_usd = (total_mem / 1024.0 * wall * LAMBDA_GB_SECOND
                   + n * invocations_per_worker * LAMBDA_PER_REQUEST)
-    # param store billed only while synchronization is running (Section 4.3)
-    sync_s = iters * it["comm"]
+    # param store billed only while synchronization is actually holding
+    # it (Section 4.3): the plan's per-phase store-busy time — re-upload
+    # fan-in levels included, decompress CPU excluded — so billing stays
+    # in parity with the event engine's keep-alive window for every
+    # strategy
+    sync_s = iters * it["store_busy"]
     store_hourly = (param_store.vcpus * 0.04048
                     + param_store.memory_gb * 0.004445)
     store_usd = sync_s / 3600.0 * store_hourly
@@ -106,7 +111,8 @@ def epoch_estimate(w: Workload, scheme: str, config: Config,
     return est
 
 
-def profile_cost(w: Workload, scheme: str, config: Config, global_batch: int,
+def profile_cost(w: Workload, scheme: CommLike, config: Config,
+                 global_batch: int,
                  param_store: ParamStore, object_store: ObjectStore,
                  profile_iters: int = 3, *, framework_init_s: float = 4.0,
                  cold_start_s: float = 2.0,

@@ -16,10 +16,11 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.bayes_opt import BayesianOptimizer, Config, ConfigSpace
-from repro.core.constraints import Goal, staleness_inflation
+from repro.core.comm import CommSpec, parse_scheme
+from repro.core.constraints import (Goal, compression_inflation,
+                                    staleness_inflation)
 from repro.core.cost_model import epoch_estimate, profile_cost
 from repro.core.monitor import ThroughputMonitor
-from repro.serverless.events import EventEngine
 from repro.serverless.platform import ServerlessPlatform, fleet_from_config
 from repro.serverless.stores import ObjectStore, ParamStore
 from repro.serverless.worker import Workload
@@ -99,14 +100,27 @@ class TaskScheduler:
 
     def _space_for(self, w: Workload) -> ConfigSpace:
         """Resource-manager floor: the function must hold model + grads +
-        framework (Section 4.1) — prunes configs that could never run."""
+        framework (Section 4.1) — prunes configs that could never run.
+        The fleet-composition and comm-plan search dimensions carry over
+        from the scheduler's space."""
         model_mb = int(3 * 4 * w.param_count / 1e6) + 512
         lo = min(max(self.space.min_memory, model_mb),
                  self.space.max_memory - 1)
-        return ConfigSpace(min_workers=self.space.min_workers,
-                           max_workers=self.space.max_workers,
-                           min_memory=lo, max_memory=self.space.max_memory,
-                           memory_step=self.space.memory_step)
+        return dataclasses.replace(self.space, min_memory=lo)
+
+    def _comm_for(self, config: Config):
+        """The communication schedule a config deploys: the scheduler's
+        default scheme unless the optimizer searched the comm dimensions
+        (``Config.comm``/``compress_ratio``/``branching``)."""
+        if (not config.comm and config.compress_ratio >= 1.0
+                and config.branching <= 0):
+            return self.scheme
+        base = (parse_scheme(self.scheme) if not config.comm
+                else CommSpec(config.comm))
+        return dataclasses.replace(base, ratio=config.compress_ratio,
+                                   branching=(config.branching
+                                              if base.strategy == "hier"
+                                              else 0))
 
     # -- Bayesian re-optimization (triggered on training-dynamics change) ----
     def optimize(self, w: Workload, batch: int, goal: Goal,
@@ -134,12 +148,14 @@ class TaskScheduler:
                                 space.max_workers),
                             min(max(warm_start.memory_mb, space.min_memory),
                                 space.max_memory),
-                            warm_start.small_frac)]
+                            warm_start.small_frac, warm_start.comm,
+                            warm_start.compress_ratio, warm_start.branching)]
         t_prof = usd_prof = 0.0
         while not bo.done():
             c = seeds.pop(0) if seeds else bo.suggest()
+            comm = self._comm_for(c)
             pt, pu, _ = profile_cost(
-                w, self.scheme, c, batch, self.param_store, self.object_store,
+                w, comm, c, batch, self.param_store, self.object_store,
                 self.profile_iters, framework_init_s=self.framework_init_s,
                 cold_start_s=self.cold_start_s)
             if pt > self.probe_cap_s:
@@ -155,17 +171,19 @@ class TaskScheduler:
             t_prof += pt
             usd_prof += pu
             est = epoch_estimate(
-                w, self.scheme, c, batch, self.param_store, self.object_store,
+                w, comm, c, batch, self.param_store, self.object_store,
                 framework_init_s=self.framework_init_s,
                 cold_start_s=self.cold_start_s, samples=samples)
             total_t = est.wall_s * epochs_remaining
             total_c = est.cost_usd * epochs_remaining
-            # ssp-aware objective: a relaxed sync mode buys wall-clock per
-            # epoch but pays iterations-to-converge — judge the candidate
-            # on staleness-inflated time and dollars
+            # convergence-aware objective: a relaxed sync mode buys
+            # wall-clock per epoch, a top-k ratio buys wire bytes — both
+            # pay iterations-to-converge, so judge the candidate on
+            # inflated time and dollars
             infl = staleness_inflation(
                 self.engine_opts.get("sync_mode", "bsp"),
                 self.engine_opts.get("staleness", 0), c.workers)
+            infl *= compression_inflation(c.compress_ratio)
             obj, cons, _ = goal.objective_and_constraint(total_t, total_c,
                                                          inflation=infl)
             bo.observe(c, obj, cons)
@@ -183,6 +201,9 @@ class TaskScheduler:
         the per-iteration ThroughputMonitor detects a sustained drift, the
         engine checkpoints and stops, we re-optimize *mid-epoch*, and the
         remaining samples run under the new deployment."""
+        # deferred: events consumes the CommPlan IR from repro.core, so a
+        # top-level import here would close an import cycle
+        from repro.serverless.events import EventEngine
         wall = cost = 0.0
         restarts = failures = 0
         t_prof = usd_prof = 0.0
@@ -211,7 +232,8 @@ class TaskScheduler:
                 opts["fleet"] = fleet_from_config(
                     config.workers, config.memory_mb, config.small_frac)
             r = EventEngine(
-                plan.workload, self.scheme, config.workers, config.memory_mb,
+                plan.workload, self._comm_for(config), config.workers,
+                config.memory_mb,
                 plan.batch_size, self.param_store, self.object_store,
                 platform=self.platform,
                 framework_init_s=self.framework_init_s,
@@ -304,8 +326,8 @@ class TaskScheduler:
                 commit = None
             else:
                 est = epoch_estimate(
-                    plan.workload, self.scheme, config, plan.batch_size,
-                    self.param_store, self.object_store,
+                    plan.workload, self._comm_for(config), config,
+                    plan.batch_size, self.param_store, self.object_store,
                     framework_init_s=self.framework_init_s,
                     cold_start_s=self.cold_start_s, samples=samples_left)
                 # fault injection: failed iterations are redone (Section 4.1)
@@ -317,8 +339,11 @@ class TaskScheduler:
                 restarts = est.restarts_per_worker
 
                 def commit(est=est, wall=wall, config=config):
-                    self.param_store.keep_alive(est.iters
-                                                * est.it_breakdown["comm"])
+                    # per-phase store-busy time from the plan (re-upload
+                    # fan-in included, decompress CPU excluded) — the
+                    # same basis epoch_estimate bills store_usd on
+                    self.param_store.keep_alive(
+                        est.iters * est.it_breakdown["store_busy"])
                     # Lambda semantics: every worker is a request, and every
                     # duration-cap restart re-invokes the whole fleet
                     self.platform.ledger.charge_fleet(

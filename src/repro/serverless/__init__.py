@@ -5,5 +5,5 @@ from repro.serverless.platform import (  # noqa: F401
     fleet_from_config)
 from repro.serverless.stores import ObjectStore, ParamStore, SharedLink  # noqa: F401
 from repro.serverless.worker import (  # noqa: F401
-    WORKLOADS, CommPhase, LocalWorkerPool, Workload, comm_breakdown,
-    comm_plan, iteration_time, parse_sync_mode)
+    WORKLOADS, LocalWorkerPool, Workload, comm_breakdown, iteration_time,
+    parse_sync_mode)

@@ -5,10 +5,26 @@ epoch in one expression — nothing can *happen* inside it. This engine
 replays the same epoch as a time-ordered event simulation with one state
 machine per worker::
 
-    invoke -> cold-start -> [data-fetch] -> { compute -> UL-shard ->
-        aggregate (DL-shard + UL-aggr) -> DL-grad -> step }* -> finish
+    invoke -> cold-start -> [data-fetch] -> { compute ->
+        <CommPlan phases> -> step }* -> finish
 
-which makes the paper's dynamics first-class:
+The per-iteration communication is not hard-coded: the engine executes
+the same ``repro.core.comm.CommPlan`` the analytic model prices, phase
+by phase. The phase DAG contract it honors:
+
+  - phases run in sequence per worker; workers ``0..fan_in-1``
+    participate in a phase (aggregators relabeled to the lowest ids),
+    everyone else skips it;
+  - a participating worker opens one transfer of ``nbytes`` on the
+    phase's store link (``requests`` round-trips of setup latency), so
+    hierarchy levels contend on the *real* ``SharedLink`` — and interact
+    with caps, failures, shocks, and cross-job traffic;
+  - ``cpu_s`` (e.g. densifying a compressed payload) computes after the
+    transfer, off the link — the store's keep-alive window excludes it;
+  - in bsp, ``barrier_after`` joins **all** n workers before anyone
+    proceeds; ssp(k)/async drop the joins and keep only their gates.
+
+This makes the paper's dynamics first-class:
 
   - **Contended stores**: transfers share store bandwidth only while they
     actually overlap (``SharedLink`` processor sharing), instead of the
@@ -64,10 +80,11 @@ from repro.serverless.platform import (CHECKPOINT_RESTORE_S,
                                        LAMBDA_PER_REQUEST, FleetSpec,
                                        InvocationRecord, ServerlessPlatform,
                                        ShockModel, fn_net_gbps)
+from repro.core.comm import CommLike, CommPlan, build_plan
 from repro.serverless.stores import (ECS_GB_HOUR, ECS_VCPU_HOUR, S3_GET_PER_1K,
                                      ObjectStore, ParamStore, SharedLink)
-from repro.serverless.worker import (CommPhase, Workload, comm_plan,
-                                     compute_time, parse_sync_mode)
+from repro.serverless.worker import (Workload, compute_time,
+                                     fleet_local_batches, parse_sync_mode)
 
 _EPS_GB = 1e-12          # flow remainder considered complete (~1e-3 byte)
 
@@ -240,7 +257,7 @@ class EventEngine:
     the module docstring for the semantics; construction mirrors
     ``epoch_estimate``'s signature so the two paths are interchangeable."""
 
-    def __init__(self, workload: Workload, scheme: str, n_workers: int,
+    def __init__(self, workload: Workload, scheme: CommLike, n_workers: int,
                  memory_mb: float, global_batch: int,
                  param_store: ParamStore, object_store: ObjectStore, *,
                  fleet: Optional[FleetSpec] = None,
@@ -291,10 +308,21 @@ class EventEngine:
         self.on_iteration = on_iteration
         self.trace_enabled = trace_enabled
 
-        local_batch = max(global_batch // self.n, 1)
-        self.base_compute_s = [compute_time(workload, local_batch, m)
-                               for m in self.mem]
-        self.plan: List[CommPhase] = comm_plan(
+        if fleet.is_homogeneous:
+            local_batch = max(global_batch // self.n, 1)
+            self.base_compute_s = [compute_time(workload, local_batch, m)
+                                   for m in self.mem]
+        else:
+            # load-aware shard placement: the global batch splits in
+            # proportion to worker speed, so per-iteration compute is the
+            # same on every worker (the analytic fleet estimate's exact
+            # regime) — mixed fleets stop paying the barrier at the slow
+            # tier's compute
+            self.base_compute_s = [
+                compute_time(workload, lb, m)
+                for lb, m in zip(fleet_local_batches(fleet, global_batch),
+                                 self.mem)]
+        self.plan: CommPlan = build_plan(
             scheme, workload.grad_bytes, self.n,
             extra_upload_bytes=workload.extra_upload_bytes)
         # per-worker function-network caps, carried as per-flow caps on the
@@ -406,8 +434,12 @@ class EventEngine:
             link.flows[tr.fid] = tr
             self._reschedule(link)
 
-    def _do_compute(self, w: _WorkerState, duration: float, cont: Callable):
-        w.activity = ("compute", cont)
+    def _do_compute(self, w: _WorkerState, duration: float, cont: Callable,
+                    redo: Optional[Callable] = None):
+        """``redo`` is what a correlated shock (which *loses* in-flight
+        work) restarts instead of the whole iteration — e.g. a decompress
+        segment inside a comm phase redoes that phase, not the compute."""
+        w.activity = ("compute", cont, redo)
         w.seg_end = self.now + duration
         w.seg_gen += 1
 
@@ -478,10 +510,11 @@ class EventEngine:
             return                               # waiting: barrier will defer
         kind = act[0]
         if kind == "compute":
-            _, cont = act
+            _, cont, redo = act
             remaining = max(w.seg_end - self.now, 0.0)
             w.seg_gen += 1
-            w.pending = lambda: self._do_compute(w, remaining, cont)
+            w.pending = lambda: self._do_compute(w, remaining, cont,
+                                                 redo=redo)
         elif kind == "transfer":
             _, tr, _cont = act
             self._detach_transfer(tr)
@@ -573,7 +606,9 @@ class EventEngine:
             # else: waiting at a barrier/gate — the release will deliver
         elif act[0] == "compute":
             w.seg_gen += 1
-            w.pending = lambda: self._compute_phase(w)
+            redo = act[2]
+            w.pending = redo if redo is not None else (
+                lambda: self._compute_phase(w))
         else:                                    # transfer: bytes are lost
             _, tr, _cont = act
             self._detach_transfer(tr)
@@ -666,18 +701,36 @@ class EventEngine:
         self._do_compute(w, d, lambda: self._comm_phase(w, 0))
 
     def _comm_phase(self, w: _WorkerState, pi: int):
+        """Execute the plan's phases generically: workers ``0..fan_in-1``
+        participate in phase ``pi`` (aggregators are relabeled to the
+        lowest ids); the rest skip straight to its barrier. A phase with
+        ``cpu_s`` (decompressing a sparse payload) computes after its
+        transfer, off the store link. In bsp, ``barrier_after`` joins all
+        n workers; ssp/async drop the joins."""
         if self._stopping:
             return self._finish_worker(w)        # discard partial iteration
-        if pi >= len(self.plan):
+        if pi >= len(self.plan.phases):
             return self._iteration_done(w)
-        ph = self.plan[pi]
+        ph = self.plan.phases[pi]
 
-        def done():
+        def advance():
             if self.mode == "bsp" and ph.barrier_after:
                 self._barrier((ph.name, w.it), w,
                               lambda: self._comm_phase(w, pi + 1))
             else:
                 self._comm_phase(w, pi + 1)
+
+        if w.wid >= ph.fan_in:
+            return advance()                     # not a participant
+
+        def done():
+            if ph.cpu_s > 0:
+                # a shock mid-decompress redoes this phase (payload lost),
+                # not the iteration's compute
+                self._do_compute(w, ph.cpu_s, advance,
+                                 redo=lambda: self._comm_phase(w, pi))
+            else:
+                advance()
 
         self._start_transfer(w, ph.store, ph.nbytes, ph.requests, done,
                              is_sync=True)

@@ -104,6 +104,12 @@ class FleetSpec:
         this rate (exact in the identical-memory limit)."""
         return len(self) / sum(1.0 / fn_gflops(m) for m in self.memories)
 
+    def gflops_total(self) -> float:
+        """Aggregate fleet compute rate — the load-aware placement's
+        denominator: with the global batch split in proportion to worker
+        speed, every worker computes for ``flops * batch / total``."""
+        return sum(fn_gflops(m) for m in self.memories)
+
     def min_net_gbps(self) -> float:
         """Sync bound for the analytic approximation: a barriered exchange
         completes no faster than the narrowest worker's pipe."""

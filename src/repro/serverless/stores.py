@@ -33,19 +33,24 @@ class TransferStats:
 
 
 class SharedLink:
-    """Processor-sharing bandwidth resource for the event engine.
+    """Water-filling processor-sharing bandwidth resource for the event
+    engine.
 
     The analytic model divides a store's aggregate bandwidth by a static
-    ``concurrent=n``; here, transfers that *actually overlap in time* share
-    the link: each of k concurrent flows progresses at
-    ``min(flow cap, aggregate / k)`` GB/s, re-evaluated whenever a flow
-    joins or leaves. A flow's cap defaults to the link's ``per_stream_gbps``
-    but a transfer may carry its own ``cap_gbps`` (heterogeneous fleets:
-    each worker's function-network limit). One link may be shared by
-    *several* engines in a ``ContentionDomain`` — cross-job transfers then
-    slow each other by their actual overlap. (Keep-alive billing is the
-    engine's job: it tracks the union of time gradient-sync transfers are
-    outstanding, across links.)"""
+    ``concurrent=n``; here, transfers that *actually overlap in time*
+    share the link by max-min fair water-filling: flows are offered equal
+    shares of the aggregate, a flow capped below its share (its own
+    ``cap_gbps``, defaulting to the link's ``per_stream_gbps``) keeps only
+    its cap, and the share it cannot use is redistributed across the
+    remaining flows — the link is never idle while any uncapped flow is
+    backlogged, and total throughput never exceeds
+    ``min(aggregate, sum of caps)``. Rates are re-evaluated whenever a
+    flow joins or leaves. With identical caps this reduces to the classic
+    ``min(cap, aggregate / k)`` processor sharing. One link may be shared
+    by *several* engines in a ``ContentionDomain`` — cross-job transfers
+    then slow each other by their actual overlap. (Keep-alive billing is
+    the engine's job: it tracks the union of time gradient-sync transfers
+    are outstanding, across links.)"""
 
     def __init__(self, name: str, aggregate_gbps: float,
                  per_stream_gbps: float, latency_s: float):
@@ -57,17 +62,39 @@ class SharedLink:
         self.setup = 0                       # transfers in the latency phase
         self.generation = 0                  # bumped on any flow-set change
         self.last_t = 0.0
+        self._rates_key = None               # (generation, len) of the cache
+        self._rates: Dict[int, float] = {}
 
-    def flow_rate(self, tr: Any) -> float:
-        k = len(self.flows)
-        if k == 0:
-            return 0.0
-        cap = getattr(tr, "cap_gbps", None) or self.per_stream_gbps
-        return min(cap, self.aggregate_gbps / k)
+    def _cap(self, tr: Any) -> float:
+        return getattr(tr, "cap_gbps", None) or self.per_stream_gbps
+
+    def rates(self) -> Dict[int, float]:
+        """Max-min fair (water-filling) rate per flow id. Visiting flows
+        narrowest-cap first, each takes ``min(cap, remaining / flows
+        left)`` — a capped flow's unused equal share waterfalls to the
+        wider flows behind it. Rates only change when the flow set does
+        (every mutation bumps ``generation``), so the allocation is
+        cached per (generation, flow count)."""
+        key = (self.generation, len(self.flows))
+        if key == self._rates_key:
+            return self._rates
+        order = sorted(self.flows.values(), key=lambda tr: (self._cap(tr),
+                                                            tr.fid))
+        out: Dict[int, float] = {}
+        remaining = self.aggregate_gbps
+        left = len(order)
+        for tr in order:
+            r = min(self._cap(tr), remaining / left)
+            out[tr.fid] = r
+            remaining -= r
+            left -= 1
+        self._rates_key, self._rates = key, out
+        return out
 
     def next_completion_dt(self) -> float:
         """Time until the first flow drains at the current per-flow rates."""
-        return min(tr.remaining_gb / self.flow_rate(tr)
+        rates = self.rates()
+        return min(tr.remaining_gb / rates[tr.fid]
                    for tr in self.flows.values())
 
     def progress(self, now: float):
@@ -75,9 +102,10 @@ class SharedLink:
         last flow-set change (rates only change when the set changes)."""
         dt = now - self.last_t
         if dt > 0 and self.flows:
+            rates = self.rates()
             for tr in self.flows.values():
-                r = self.flow_rate(tr)
-                tr.remaining_gb = max(tr.remaining_gb - r * dt, 0.0)
+                tr.remaining_gb = max(tr.remaining_gb - rates[tr.fid] * dt,
+                                      0.0)
         self.last_t = now
 
 

@@ -4,12 +4,15 @@ Two execution paths share the same interfaces:
 
  - **Analytic path** (paper-scale models, e.g. BERT-medium x 200 workers):
    per-iteration compute/communication times from a calibrated workload
-   model. This is what the paper-figure benchmarks use.
+   model. The communication schedule is a ``repro.core.comm.CommPlan``
+   priced in closed form with per-phase fan-in contention. This is what
+   the paper-figure benchmarks use.
  - **Semantic path** (``LocalWorkerPool``): n logical workers each compute
    real JAX gradients on their minibatch slice and synchronize through the
-   (simulated) stores with real numpy payloads — used by tests/examples to
-   prove the hierarchical synchronization is exactly equivalent to
-   full-batch all-reduce.
+   (simulated) stores with real numpy payloads — the plan's *strategy*
+   selects matching numerics (shard aggregation, tree means, top-k +
+   error-feedback sparse sync), used by tests/examples to prove the
+   synchronization is exactly equivalent to full-batch all-reduce.
 """
 from __future__ import annotations
 
@@ -21,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.comm import (CommLike, CommPlan, CommSpec, build_plan,
+                             plan_times)
 from repro.serverless.platform import FleetSpec, fn_gflops, fn_net_gbps
 from repro.serverless.stores import ObjectStore, ParamStore
 
@@ -55,80 +60,23 @@ WORKLOADS = {
 }
 
 
-def compute_time(w: Workload, local_batch: int, memory_mb: float) -> float:
+def compute_time(w: Workload, local_batch: float, memory_mb: float) -> float:
     return w.flops_per_sample * local_batch / (fn_gflops(memory_mb) * 1e9)
 
 
-@dataclasses.dataclass(frozen=True)
-class CommPhase:
-    """One per-worker communication step of an iteration.
-
-    Shared between the analytic model (``comm_breakdown`` sums static phase
-    times) and the event engine (``repro.serverless.events`` turns each
-    phase into a contended transfer on the store's SharedLink).
-    """
-    name: str
-    store: str                 # "param" | "object"
-    nbytes: float              # bytes moved by one (busiest) worker
-    requests: int = 1          # store round-trips -> latency multiplier
-    barrier_after: bool = False  # bsp data dependency (engine only)
+def fleet_local_batches(fleet: FleetSpec, global_batch: int) -> List[float]:
+    """Load-aware shard placement: the global batch splits in proportion
+    to each worker's compute rate, so every worker's compute time is the
+    same ``flops * global_batch / sum(rates)`` — the mixed fleet stops
+    paying the bsp barrier at its slowest worker's *compute* (network
+    caps remain per-worker). Exactly the equal split for homogeneous
+    fleets."""
+    rates = [fn_gflops(m) for m in fleet.memories]
+    total = sum(rates)
+    return [global_batch * r / total for r in rates]
 
 
-def comm_plan(scheme: str, grad_bytes: float, n_workers: int,
-              n_shards: Optional[int] = None,
-              extra_upload_bytes: float = 0.0,
-              topk_ratio: float = 0.05) -> List[CommPhase]:
-    """Per-iteration communication phases (paper Figs. 5 and 7).
-
-    schemes:
-      "hier"      — SMLT: shard -> aggregate -> redistribute via param store.
-      "hier_topk" — hier + top-k/error-feedback compressed uploads
-                    (beyond-paper; see repro.core.compression): upload
-                    bytes scale by 2*ratio (value+index per kept entry);
-                    the aggregated download densifies as min(1, n*ratio).
-      "ps"        — Cirrus-style central store (every worker downloads
-                    everyone's gradients).
-      "ps_s3"     — Siren-style: same pattern through the object store.
-    """
-    n = n_workers
-    m = n_shards or n
-    G = grad_bytes + extra_upload_bytes
-
-    if scheme == "hier_topk":
-        up = 2.0 * topk_ratio            # (4B value + 4B index) / 4B dense
-        dense_dl = min(1.0, n * topk_ratio)
-        return [
-            CommPhase("UL-Shard", "param", G * up, m, barrier_after=True),
-            CommPhase("DL-Shard", "param", n * G * up / m, n),
-            CommPhase("UL-aggr", "param", G * dense_dl / m, 1,
-                      barrier_after=True),
-            CommPhase("DL-grad", "param", G * dense_dl, m),
-        ]
-    if scheme == "hier":
-        # each of the busiest aggregators owns ceil(m/n) shards; with m < n
-        # the n-m idle workers don't help and the busy ones pull n*G/m
-        # (paper footnote 4: "m less than n will cause some workers to be
-        # idle during aggregation, which will affect performance")
-        spa = max(math.ceil(m / n), 1)
-        return [
-            CommPhase("UL-Shard", "param", G, m,          # own grad, m shards
-                      barrier_after=True),
-            CommPhase("DL-Shard", "param", spa * n * (G / m),
-                      spa * n),                           # collect owned shards
-            CommPhase("UL-aggr", "param", spa * G / m, spa,
-                      barrier_after=True),
-            CommPhase("DL-grad", "param", m * (G / m), m),  # all agg shards
-        ]
-    if scheme == "ps":
-        return [CommPhase("UL-grad", "param", G, 1, barrier_after=True),
-                CommPhase("DL-grad", "param", n * G, 1)]
-    if scheme == "ps_s3":
-        return [CommPhase("UL-grad", "object", G, 1, barrier_after=True),
-                CommPhase("DL-grad", "object", n * G, 1)]
-    raise ValueError(scheme)
-
-
-def comm_breakdown(scheme: str, grad_bytes: float, n_workers: int,
+def comm_breakdown(scheme: CommLike, grad_bytes: float, n_workers: int,
                    memory_mb: float, param_store: ParamStore,
                    object_store: ObjectStore,
                    n_shards: Optional[int] = None,
@@ -136,53 +84,53 @@ def comm_breakdown(scheme: str, grad_bytes: float, n_workers: int,
                    topk_ratio: float = 0.05,
                    fn_net_override_gbps: Optional[float] = None
                    ) -> Dict[str, float]:
-    """Static per-phase times: every phase is assumed to run with all n
-    workers contending (the event engine relaxes this to *actual* overlap).
-    ``fn_net_override_gbps`` replaces the memory-derived per-function
-    bandwidth — the mixed-fleet approximation passes the *narrowest*
-    worker's pipe (a barriered exchange is bound by it)."""
-    n = n_workers
+    """Static per-phase times of the communication plan. Each phase runs
+    with its own ``fan_in`` workers contending (the event engine relaxes
+    this to *actual* overlap). ``fn_net_override_gbps`` replaces the
+    memory-derived per-function bandwidth — the mixed-fleet approximation
+    passes the *narrowest* worker's pipe (a barriered exchange is bound
+    by it)."""
     fn_net = (fn_net_override_gbps if fn_net_override_gbps is not None
               else fn_net_gbps(memory_mb))
     fn_bw = fn_net * 8  # not a bottleneck vs store; keep wide
-    out: Dict[str, float] = {}
-    for ph in comm_plan(scheme, grad_bytes, n, n_shards=n_shards,
-                        extra_upload_bytes=extra_upload_bytes,
-                        topk_ratio=topk_ratio):
-        if ph.store == "param":
-            out[ph.name] = (param_store.xfer_time(ph.nbytes, concurrent=n,
-                                                  per_fn_gbps=fn_bw)
-                            + param_store.latency_s * max(ph.requests - 1, 0))
-        else:
-            out[ph.name] = (object_store.put_time(ph.nbytes, concurrent=n)
-                            + object_store.latency_s * max(ph.requests - 1, 0))
-    return out
+    plan = build_plan(scheme, grad_bytes, n_workers, n_shards=n_shards,
+                      extra_upload_bytes=extra_upload_bytes,
+                      topk_ratio=topk_ratio)
+    times, _busy = plan_times(plan, param_store, object_store, fn_bw)
+    return times
 
 
-def iteration_time(w: Workload, scheme: str, n_workers: int, memory_mb: float,
-                   global_batch: int, param_store: ParamStore,
-                   object_store: ObjectStore, *,
+def iteration_time(w: Workload, scheme: CommLike, n_workers: int,
+                   memory_mb: float, global_batch: int,
+                   param_store: ParamStore, object_store: ObjectStore, *,
                    fleet: Optional[FleetSpec] = None) -> Dict[str, float]:
     """Closed-form per-iteration time. With a ``fleet``, the mixed-memory
-    approximation the Bayesian optimizer probes with: compute at the
-    weighted-harmonic per-worker rate (exact for identical memories),
-    synchronization at the min-bandwidth bound (narrowest worker's pipe).
-    """
+    approximation the Bayesian optimizer probes with: load-aware batch
+    placement makes compute ``flops * batch / sum(worker rates)`` (exact,
+    since every worker finishes its proportional slice together), while
+    synchronization keeps the min-bandwidth bound (narrowest worker's
+    pipe). Besides ``compute``/``comm``/``total`` and the per-phase
+    entries, the breakdown carries ``store_busy`` — the seconds the
+    stores are held by transfers (the keep-alive billing basis, which
+    excludes any decompress CPU in ``comm``)."""
     n_workers = len(fleet) if fleet is not None else n_workers
-    local_batch = max(global_batch // n_workers, 1)
-    if fleet is None:
-        comp = compute_time(w, local_batch, memory_mb)
-        net_override = None
+    if fleet is None or fleet.is_homogeneous:
+        mem = fleet.memories[0] if fleet is not None else memory_mb
+        local_batch = max(global_batch // n_workers, 1)
+        comp = compute_time(w, local_batch, mem)
+        net_override = None if fleet is None else fleet.min_net_gbps()
     else:
-        comp = w.flops_per_sample * local_batch / (fleet.gflops_harmonic()
-                                                   * 1e9)
+        comp = (w.flops_per_sample * global_batch
+                / (fleet.gflops_total() * 1e9))
         net_override = fleet.min_net_gbps()
-    comm = comm_breakdown(scheme, w.grad_bytes, n_workers, memory_mb,
-                          param_store, object_store,
-                          extra_upload_bytes=w.extra_upload_bytes,
-                          fn_net_override_gbps=net_override)
+    fn_net = (net_override if net_override is not None
+              else fn_net_gbps(memory_mb))
+    plan = build_plan(scheme, w.grad_bytes, n_workers,
+                      extra_upload_bytes=w.extra_upload_bytes)
+    comm, store_busy = plan_times(plan, param_store, object_store, fn_net * 8)
     return {"compute": comp, "comm": sum(comm.values()),
-            "total": comp + sum(comm.values()), **comm}
+            "total": comp + sum(comm.values()), "store_busy": store_busy,
+            **comm}
 
 
 # ---------------------------------------------------------------------------
@@ -236,7 +184,23 @@ def parse_sync_mode(sync_mode: str, staleness: int = 0):
 
 class LocalWorkerPool:
     """Semantic SMLT: n logical workers with real JAX grads, synchronizing
-    via the (simulated) param store exactly as Figure 5 prescribes.
+    via the (simulated) param store under a ``CommPlan``.
+
+    ``plan`` (a ``CommPlan``, ``CommSpec``, or legacy scheme string)
+    selects the synchronization *numerics* to match what the simulator
+    prices:
+      - ``scatter_reduce`` (default; legacy scheme "hier"): workers shard
+        their gradients, worker j aggregates shard j from everyone and
+        re-uploads it, exactly as Figure 5 prescribes.
+      - ``ps``: every worker uploads its full gradient; the mean is taken
+        over all n full gradients (Cirrus/Siren pattern).
+      - ``hier``: partial sums reduce up a ``branching``-ary tree of
+        group aggregators; the root mean is redistributed.
+      - a compressed plan (``ratio < 1``): workers upload top-k sparse
+        gradients with per-worker error feedback
+        (``repro.core.compression``); the aggregator sums the sparse
+        contributions. ``ratio=1.0`` keeps every entry — numerically the
+        dense mean.
 
     ``use_kernel=True`` runs the shard aggregation (step 3 of Fig. 5)
     through the Pallas ``hier_agg`` kernel instead of numpy.
@@ -254,18 +218,32 @@ class LocalWorkerPool:
 
     def __init__(self, grad_fn: Callable, n_workers: int,
                  param_store: ParamStore, *, use_kernel: bool = False,
+                 plan: Optional[CommLike] = None,
                  sync_mode: str = "bsp", staleness: int = 0, seed: int = 0,
                  async_refresh_p: float = 0.5):
         self.grad_fn = grad_fn
         self.n = n_workers
         self.store = param_store
         self.use_kernel = use_kernel
+        # the pool only consumes the plan's strategy/ratio/branching and
+        # accounts store bytes from the real payloads it moves, so specs
+        # and scheme strings bind to a token-size plan (grad bytes are
+        # only known per step); a prebuilt plan is taken as-is
+        if isinstance(plan, CommPlan):
+            if plan.n_workers != n_workers:
+                raise ValueError(f"plan built for n={plan.n_workers}, "
+                                 f"pool has n={n_workers}")
+            self.plan = plan
+        else:
+            self.plan = build_plan(plan if plan is not None else "hier",
+                                   1.0, n_workers)
         self.mode, self.staleness = parse_sync_mode(sync_mode, staleness)
         self.async_refresh_p = async_refresh_p
         self._rng = np.random.RandomState(seed)
         self._iter = 0
         self._snaps: List = [None] * n_workers    # stale param snapshots
         self._vers = [0] * n_workers
+        self._ef: Dict[int, "ErrorFeedback"] = {}  # compressed path only
 
     def _worker_params(self, w: int, params):
         """The (possibly stale) params worker ``w`` computes gradients at."""
@@ -285,24 +263,45 @@ class LocalWorkerPool:
             self._vers[w] = self._iter
         return self._snaps[w]
 
-    def step(self, params, global_batch) -> Dict:
-        """global_batch: dict of arrays with leading dim divisible by n.
-        Returns the aggregated (mean) gradient pytree."""
+    def _worker_grads(self, params, global_batch):
+        """Each worker's flat gradient on its batch slice (stale-aware)."""
         n = self.n
-        shards_meta = None
-        # (1) each worker computes grads on its slice, shards, uploads
+        flats, g_like = [], None
         for w in range(n):
             sl = jax.tree.map(
                 lambda x: x[w * (x.shape[0] // n):(w + 1) * (x.shape[0] // n)],
                 global_batch)
             g = self.grad_fn(self._worker_params(w, params), sl)
-            flat = flatten_grads(g)
-            shards = make_shards(flat, n)
-            shards_meta = (len(flat), g)
-            for j, s in enumerate(shards):
+            flats.append(flatten_grads(g))
+            g_like = g
+        return flats, g_like
+
+    def step(self, params, global_batch) -> Dict:
+        """global_batch: dict of arrays with leading dim divisible by n.
+        Returns the aggregated (mean) gradient pytree."""
+        if self.plan.ratio < 1.0:
+            mean_flat, g_like = self._step_compressed(params, global_batch)
+        elif self.plan.strategy == "ps":
+            mean_flat, g_like = self._step_ps(params, global_batch)
+        elif self.plan.strategy == "hier":
+            mean_flat, g_like = self._step_hier(params, global_batch)
+        else:
+            mean_flat, g_like = self._step_scatter_reduce(params,
+                                                          global_batch)
+        self._iter += 1
+        return unflatten_grads(mean_flat, g_like)
+
+    # -- strategy numerics ---------------------------------------------------
+    def _step_scatter_reduce(self, params, global_batch):
+        n = self.n
+        flats, g_like = self._worker_grads(params, global_batch)
+        flat_size = len(flats[0])
+        # (1) each worker shards its gradient and uploads the shards
+        for w, flat in enumerate(flats):
+            for j, s in enumerate(make_shards(flat, n)):
                 self.store.put(f"shard/{w}/{j}", s, nbytes=s.nbytes)
         # (2) worker j aggregates shard j from all workers (mean), re-uploads
-        for j in range(self.n):
+        for j in range(n):
             stacked = np.stack([self.store.get(f"shard/{w}/{j}")
                                 for w in range(n)])
             if self.use_kernel:
@@ -313,8 +312,59 @@ class LocalWorkerPool:
             self.store.put(f"aggr/{j}", agg, nbytes=agg.nbytes)
         # (3) every worker downloads all aggregated shards -> updated model;
         # they are identical, so reconstruct once.
-        flat_size, g_like = shards_meta
         agg = [self.store.get(f"aggr/{j}") for j in range(n)]
-        mean_flat = join_shards(agg, flat_size)
-        self._iter += 1
-        return unflatten_grads(mean_flat, g_like)
+        return join_shards(agg, flat_size), g_like
+
+    def _step_ps(self, params, global_batch):
+        n = self.n
+        flats, g_like = self._worker_grads(params, global_batch)
+        for w, flat in enumerate(flats):
+            self.store.put(f"grad/{w}", flat, nbytes=flat.nbytes)
+        acc = np.zeros(len(flats[0]), np.float32)
+        for w in range(n):
+            acc += self.store.get(f"grad/{w}", nbytes=flats[w].nbytes)
+        return acc / n, g_like
+
+    def _step_hier(self, params, global_batch):
+        """Tree aggregation: partial sums reduce level by level through
+        the store; the root's sum / n is the exact global mean."""
+        n, b = self.n, max(self.plan.branching or 4, 2)
+        flats, g_like = self._worker_grads(params, global_batch)
+        nbytes = flats[0].nbytes
+        partials = list(flats)                   # level-0 partial sums
+        lvl = 0
+        while len(partials) > 1:
+            lvl += 1
+            for i, p in enumerate(partials):
+                self.store.put(f"hier/{lvl}/{i}", p, nbytes=nbytes)
+            nxt = []
+            for g0 in range(0, len(partials), b):
+                members = range(g0, min(g0 + b, len(partials)))
+                nxt.append(sum(self.store.get(f"hier/{lvl}/{i}",
+                                              nbytes=nbytes)
+                               for i in members))
+            partials = nxt
+        root = partials[0]
+        self.store.put("hier/root", root, nbytes=nbytes)
+        return self.store.get("hier/root", nbytes=nbytes) / n, g_like
+
+    def _step_compressed(self, params, global_batch):
+        """Top-k + error feedback: each worker uploads only its k largest
+        (corrected) entries; the aggregator sums sparse contributions.
+        Wire bytes follow the plan's compressed model (value + index)."""
+        from repro.core.compression import ErrorFeedback, compressed_bytes
+        n, ratio = self.n, self.plan.ratio
+        flats, g_like = self._worker_grads(params, global_batch)
+        size = len(flats[0])
+        for w, flat in enumerate(flats):
+            if w not in self._ef:
+                self._ef[w] = ErrorFeedback.init(size)
+            idx, vals = self._ef[w].compress(flat, ratio)
+            self.store.put(f"sparse/{w}", (idx, vals),
+                           nbytes=compressed_bytes(size, ratio))
+        acc = np.zeros(size, np.float32)
+        for w in range(n):
+            idx, vals = self.store.get(
+                f"sparse/{w}", nbytes=compressed_bytes(size, ratio))
+            acc[idx] += vals
+        return acc / n, g_like

@@ -1,0 +1,35 @@
+"""Regenerate tests/golden_engine_trace.txt after an *intentional* engine
+semantics change.
+
+    PYTHONPATH=src python tests/regen_golden_trace.py
+
+Builds the exact engine `test_golden_trace_reproduced_verbatim` pins
+(seed 42, 2 workers, 2 iterations, straggler sigma 0.3), runs it twice to
+prove the trace is byte-stable, and rewrites the golden file. Review the
+diff before committing: every changed line is a semantic change to the
+event order or timestamps that the test suite will now enforce.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+
+from test_engine_invariants import GOLDEN, _golden_engine  # noqa: E402
+
+
+def main() -> None:
+    a = _golden_engine().run()
+    b = _golden_engine().run()
+    text_a = "\n".join(a.trace) + "\n"
+    text_b = "\n".join(b.trace) + "\n"
+    if text_a != text_b:
+        raise SystemExit("trace is not byte-stable across runs; refusing "
+                         "to regenerate")
+    old = GOLDEN.read_text() if GOLDEN.exists() else ""
+    GOLDEN.write_text(text_a)
+    changed = "changed" if text_a != old else "unchanged"
+    print(f"wrote {GOLDEN} ({len(a.trace)} events, {changed})")
+
+
+if __name__ == "__main__":
+    main()

@@ -90,6 +90,58 @@ def test_compression_reduces_accounted_bytes():
     assert store_sparse.stats.bytes_in < store_dense.stats.bytes_in * 0.2
 
 
+def _lsq_problem(seed=0):
+    rng = np.random.RandomState(seed)
+    params = {"w": jnp.array(rng.randn(100, 10), jnp.float32)}
+    batch = {"x": jnp.array(rng.randn(8, 100), jnp.float32),
+             "y": jnp.array(rng.randn(8, 10), jnp.float32)}
+
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+
+    return params, batch, loss, (lambda p, b: jax.grad(loss)(p, b))
+
+
+def test_compressed_pool_matches_dense_at_ratio_one():
+    """Satellite: at ratio=1.0 the folded-in CompressedWorkerPool is the
+    dense synchronization — training trajectories must coincide with the
+    dense LocalWorkerPool's (up to float summation order)."""
+    from repro.serverless import LocalWorkerPool
+    params0, batch, loss, gf = _lsq_problem()
+    lr = 0.2
+
+    def train(pool):
+        p = params0
+        losses = []
+        for _ in range(10):
+            g = pool.step(p, batch)
+            p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+            losses.append(float(loss(p, batch)))
+        return losses
+
+    dense = train(LocalWorkerPool(gf, 4, ParamStore()))
+    comp = train(CompressedWorkerPool(gf, 4, ParamStore(), ratio=1.0))
+    np.testing.assert_allclose(comp, dense, rtol=1e-4)
+    # and error feedback at full ratio keeps everything, carries nothing
+    ef = ErrorFeedback.init(32)
+    flat = np.random.RandomState(0).randn(32).astype(np.float32)
+    idx, vals = ef.compress(flat, 1.0)
+    np.testing.assert_array_equal(topk_decompress(idx, vals, 32), flat)
+    np.testing.assert_array_equal(ef.residual, np.zeros(32, np.float32))
+
+
+def test_wire_bytes_monotone_in_ratio_on_store():
+    """Satellite: accounted upload bytes must grow monotonically with the
+    keep ratio (and the compressed-plan wire model agrees)."""
+    params, batch, _loss, gf = _lsq_problem()
+    seen = []
+    for r in (0.01, 0.05, 0.2, 0.5, 1.0):
+        store = ParamStore()
+        CompressedWorkerPool(gf, 4, store, ratio=r).step(params, batch)
+        seen.append(store.stats.bytes_in)
+    assert all(a <= b for a, b in zip(seen, seen[1:])), seen
+
+
 # -- monitor ------------------------------------------------------------------
 
 

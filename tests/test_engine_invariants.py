@@ -42,6 +42,9 @@ SAMPLES = 3 * BATCH                      # 3 iterations: fast but non-trivial
 
 def _build(scheme, n, mem, sigma, failure_rate, sync_mode, hetero, shocked,
            seed):
+    if scheme == "tree":                 # asymmetric-participation CommPlan
+        from repro.core.comm import CommSpec
+        scheme = CommSpec("hier", branching=2)
     plat = ServerlessPlatform(seed=0)
     fleet = None
     if hetero:                           # half the fleet at half memory
@@ -103,7 +106,7 @@ def _check_invariants(eng, plat, r):
 
 
 @settings(max_examples=12, deadline=None, derandomize=True)
-@given(scheme=st.sampled_from(("hier", "ps", "ps_s3")),
+@given(scheme=st.sampled_from(("hier", "ps", "ps_s3", "tree")),
        n=st.integers(2, 10),
        mem=st.sampled_from((1024, 2048, 4096)),
        sigma=st.sampled_from((0.0, 0.3, 0.6)),

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import Config, ConfigSpace, EpochPlan, Goal, TaskScheduler
+from repro.core.comm import CommSpec
 from repro.core.cost_model import epoch_estimate
 from repro.serverless import (WORKLOADS, EventEngine, FleetSpec,
                               LocalWorkerPool, ObjectStore, ParamStore,
@@ -71,6 +72,36 @@ def test_identical_fleet_matches_homogeneous_and_analytic(name, scheme, n,
     assert r.trace == homog.trace
     assert r.wall_s == pytest.approx(est.wall_s, rel=0.01)
     assert r.cost_usd == pytest.approx(est.cost_usd, rel=0.01)
+
+
+STRATEGIES = [CommSpec("ps"), CommSpec("scatter_reduce"),
+              CommSpec("hier", branching=4)]
+MODES = ["bsp", "ssp(2)", "async"]
+
+
+@pytest.mark.parametrize("spec", STRATEGIES,
+                         ids=[s.strategy for s in STRATEGIES])
+@pytest.mark.parametrize("mode", MODES)
+def test_zero_variance_strategy_sync_matrix(spec, mode):
+    """The {ps, scatter_reduce, hier} x {bsp, ssp, async} matrix: at zero
+    variance the engine must reproduce the closed form within 1% for
+    every symmetric plan (all workers run every phase, so lockstep holds
+    with or without barriers). The hier tree is asymmetric: without
+    barriers its leaves overlap the root's aggregation with their next
+    compute, so ssp/async may only be *faster* than the bsp closed form
+    (bounded — the pipelining can't beat the root's critical path by
+    much)."""
+    est = epoch_estimate(W, spec, Config(16, 4096), 1024, ParamStore(),
+                         ObjectStore(), samples=10_000)
+    r = engine(W, spec, 16, 4096, 1024, 10_000, seed=0,
+               sync_mode=mode).run()
+    assert r.iters_done == est.iters
+    if spec.strategy != "hier" or mode == "bsp":
+        assert r.wall_s == pytest.approx(est.wall_s, rel=0.01)
+        assert r.cost_usd == pytest.approx(est.cost_usd, rel=0.01)
+    else:
+        assert r.wall_s <= est.wall_s * 1.01
+        assert r.wall_s >= est.wall_s * 0.90
 
 
 def test_zero_variance_matches_with_duration_cap_restarts():
