@@ -24,8 +24,9 @@ from benchmarks import (async_staleness, comm_breakdown, comm_scaling,
                         comm_strategies, config_sensitivity,
                         dynamic_batching, hetero_fleet, kernels_bench,
                         multi_job, nas_adaptation, online_learning,
-                        optimizer_compare, roofline, scenarios,
-                        serving_slo, shard_ablation, straggler_tail)
+                        optimizer_compare, overlap_pipeline, roofline,
+                        scenarios, serving_slo, shard_ablation,
+                        straggler_tail)
 
 BENCHES = {
     "fig1_2_8_comm_scaling": comm_scaling,
@@ -33,6 +34,7 @@ BENCHES = {
     "fig4_optimizer_compare": optimizer_compare,
     "fig7_comm_breakdown": comm_breakdown,
     "comm_strategies": comm_strategies,
+    "overlap_pipeline": overlap_pipeline,
     "fig9_10_scenarios": scenarios,
     "fig11a_12_dynamic_batching": dynamic_batching,
     "fig11b_online_learning": online_learning,
@@ -49,8 +51,9 @@ BENCHES = {
 
 # the CI smoke set: the event-path benchmarks (cheap, no BO search inside)
 # plus one analytic module, all at reduced scale where supported
-QUICK = ["fig7_comm_breakdown", "comm_strategies", "event_straggler_tail",
-         "event_async_staleness", "event_hetero_fleet", "event_multi_job"]
+QUICK = ["fig7_comm_breakdown", "comm_strategies", "overlap_pipeline",
+         "event_straggler_tail", "event_async_staleness",
+         "event_hetero_fleet", "event_multi_job"]
 
 
 def _run_mod(mod, quick: bool):

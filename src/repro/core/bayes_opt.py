@@ -81,16 +81,19 @@ class Config:
     (see ``repro.serverless.platform.fleet_from_config``). 0.0 keeps the
     paper's homogeneous 2-D space.
 
-    ``comm``/``compress_ratio``/``branching`` are the searchable
-    communication-plan dimensions (``repro.core.comm.CommSpec``): the
-    aggregation strategy ("" keeps the scheduler's default scheme), the
-    top-k wire ratio (1.0 = dense), and the hier tree fan-in (0 = n/a)."""
+    ``comm``/``compress_ratio``/``branching``/``pipeline_depth`` are the
+    searchable communication-plan dimensions
+    (``repro.core.comm.CommSpec``): the aggregation strategy ("" keeps
+    the scheduler's default scheme), the top-k wire ratio (1.0 = dense),
+    the hier tree fan-in (0 = n/a), and the compute∥comm overlap depth
+    (micro-batch segments; 1 = sequential)."""
     workers: int
     memory_mb: int
     small_frac: float = 0.0
     comm: str = ""                     # "" | "ps" | "scatter_reduce" | "hier"
     compress_ratio: float = 1.0
     branching: int = 0
+    pipeline_depth: int = 1
 
     _COMM_IDX = ("", "ps", "scatter_reduce", "hier")
 
@@ -107,6 +110,9 @@ class Config:
             min(math.log10(1.0 / max(self.compress_ratio, 1e-4)) / 2.0, 1.0),
             0.0 if self.branching <= 0 else min(
                 math.log2(self.branching) / 4.0, 1.0),
+            # overlap depth on a log scale: 1 -> 0, 8 -> 1
+            0.0 if self.pipeline_depth <= 1 else min(
+                math.log2(self.pipeline_depth) / 3.0, 1.0),
         ])
 
 
@@ -123,13 +129,16 @@ class ConfigSpace:
     search_fleet: bool = False
     small_frac_choices: Tuple[float, ...] = (0.0, 0.25, 0.5)
     # communication plan: when True, candidates also draw an aggregation
-    # strategy, a top-k compression ratio, and a hier-tree branching —
-    # the optimizer trades wire bytes against the convergence cost of
-    # sparsification (constraints.compression_inflation)
+    # strategy, a top-k compression ratio, a hier-tree branching, and a
+    # compute∥comm overlap depth — the optimizer trades wire bytes
+    # against the convergence cost of sparsification
+    # (constraints.compression_inflation) and hides pre-barrier uploads
+    # under segmented compute (CommPlan.pipeline)
     search_comm: bool = False
     comm_choices: Tuple[str, ...] = ("scatter_reduce", "hier", "ps")
     ratio_choices: Tuple[float, ...] = (1.0, 0.1, 0.05, 0.01)
     branching_choices: Tuple[int, ...] = (2, 4, 8)
+    depth_choices: Tuple[int, ...] = (1, 2, 4)
 
     def sample(self, rng: np.random.RandomState, n: int) -> List[Config]:
         ws = rng.randint(self.min_workers, self.max_workers + 1, size=n)
@@ -147,11 +156,14 @@ class ConfigSpace:
                   rng.randint(len(self.ratio_choices), size=n)]
             br = [self.branching_choices[i] for i in
                   rng.randint(len(self.branching_choices), size=n)]
+            dp = [self.depth_choices[i] for i in
+                  rng.randint(len(self.depth_choices), size=n)]
         else:
-            cm, ra, br = [""] * n, [1.0] * n, [0] * n
+            cm, ra, br, dp = [""] * n, [1.0] * n, [0] * n, [1] * n
         return [Config(int(w), int(self.min_memory + m * self.memory_step),
-                       float(f), c, float(r), int(b) if c == "hier" else 0)
-                for w, m, f, c, r, b in zip(ws, ms, fr, cm, ra, br)]
+                       float(f), c, float(r), int(b) if c == "hier" else 0,
+                       int(d))
+                for w, m, f, c, r, b, d in zip(ws, ms, fr, cm, ra, br, dp)]
 
 
 @dataclasses.dataclass

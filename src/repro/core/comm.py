@@ -53,6 +53,32 @@ Strategies
 ``2·ratio`` of dense (4B value + 4B index per kept entry); an aggregate
 of j contributions densifies to ``min(1, j·ratio)``; every download of a
 compressed payload pays a decompress (sparse scatter-add) CPU charge.
+
+Overlap contract (``pipeline(depth)``)
+--------------------------------------
+``pipeline(depth)`` makes a plan *overlap-aware*: compute splits into
+``depth`` micro-batch segments (gradient accumulation — the numerics are
+unchanged), and the plan's **leading upload run** — the UL phases before
+the first barrier or download, which move the worker's *own* gradient and
+therefore exist per segment — is marked ``overlappable``. Every consumer
+executes the same schedule:
+
+ - segment *i*'s share (``nbytes / depth``, full ``requests`` round-trips)
+   of each overlappable UL may hide under compute of segment *i+1*;
+ - barrier semantics are preserved: a ``barrier_after`` on an overlappable
+   phase joins all workers only after the **last** segment's upload —
+   never per segment — and every post-barrier/download phase stays
+   strictly sequential (its input is aggregated data, not local compute);
+ - the closed form prices the iteration as
+   ``max(compute, hidden comm) + exposed comm + bubble`` with
+   ``bubble = min(compute, hidden comm) / depth`` — ``depth=1`` is
+   byte-identical to the unpipelined plan, ``depth→∞`` hides
+   ``min(compute, hidden comm)`` entirely;
+ - store-busy (keep-alive billing) is *unchanged by overlap*: a hidden
+   transfer still holds the store while it runs, so the billing basis is
+   the transfer time itself, hidden or not — and it accrues **only for
+   ``store == "param"`` phases** (an S3-path plan never bills the Redis
+   container; see ``plan_times``).
 """
 from __future__ import annotations
 
@@ -82,6 +108,13 @@ class CommPhase:
     direction: str = "ul"        # "ul" (worker->store) | "dl" (store->worker)
     level: int = 0               # hierarchy level (0 = flat)
     cpu_s: float = 0.0           # post-transfer local work (decompress)
+    # overlap (set by CommPlan.pipeline): this phase moves the worker's own
+    # per-segment gradient, so segment i's share may hide under compute of
+    # segment i+1. overlap_group records the phase's position within the
+    # upload run (informational — consumers execute overlappable phases
+    # in plan order)
+    overlappable: bool = False
+    overlap_group: int = 0
     # symbolic payload shape (used by compress):
     units: int = 1               # payload items moved by the busiest worker
     item_frac: float = 1.0       # dense size of one item, fraction of G
@@ -98,6 +131,7 @@ class CommSpec:
     branching: int = 0                 # hier fan-in per node; 0 = default 4
     levels: int = 0                    # hier depth; 0 = full depth
     store: str = "param"               # ps only: "object" = S3 (Siren)
+    pipeline_depth: int = 1            # micro-batch overlap segments; 1 = off
 
     def __post_init__(self):
         if self.strategy not in ("ps", "scatter_reduce", "hier"):
@@ -105,6 +139,9 @@ class CommSpec:
         if not 0.0 < self.ratio <= 1.0:
             raise ValueError(f"compress ratio must be in (0, 1], "
                              f"got {self.ratio}")
+        if self.pipeline_depth < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, "
+                             f"got {self.pipeline_depth}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +154,7 @@ class CommPlan:
     ratio: float = 1.0
     branching: int = 0
     levels: int = 0
+    pipeline_depth: int = 1      # micro-batch segments (1 = no overlap)
 
     @property
     def wire_bytes(self) -> float:
@@ -127,6 +165,39 @@ class CommPlan:
     def cpu_s(self) -> float:
         """Busiest worker's per-iteration post-transfer CPU time."""
         return sum(ph.cpu_s for ph in self.phases)
+
+    @property
+    def overlappable_phases(self) -> Tuple[CommPhase, ...]:
+        """The leading upload run that may hide under segmented compute
+        (empty unless ``pipeline_depth > 1``)."""
+        return tuple(ph for ph in self.phases if ph.overlappable)
+
+    def pipeline(self, depth: int) -> "CommPlan":
+        """Overlap transform: split compute into ``depth`` micro-batch
+        segments and mark the plan's leading upload run — the UL phases
+        before the first barrier or download, which move the worker's own
+        gradient — as overlappable with the *next* segment's compute.
+
+        Barrier semantics are preserved: a ``barrier_after`` on an
+        overlappable phase still joins all workers, but only once, after
+        the last segment's upload; post-barrier phases (aggregate
+        downloads, re-uploads) never overlap. ``depth=1`` rebuilds the
+        sequential plan exactly (idempotent round-trip)."""
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        phases = []
+        blocked = depth == 1
+        group = 0
+        for ph in self.phases:
+            ov = (not blocked) and ph.direction == "ul"
+            if ph.barrier_after or ph.direction == "dl":
+                blocked = True
+            phases.append(dataclasses.replace(
+                ph, overlappable=ov, overlap_group=group if ov else 0))
+            if ov:
+                group += 1
+        return dataclasses.replace(self, phases=tuple(phases),
+                                   pipeline_depth=depth)
 
     def compress(self, ratio: float,
                  decompress_gbps: float = DECOMPRESS_GBPS) -> "CommPlan":
@@ -285,6 +356,8 @@ def build_plan(comm: CommLike, grad_bytes: float, n_workers: int,
                     levels=comm.levels)
     if comm.ratio < 1.0:
         plan = plan.compress(comm.ratio)
+    if comm.pipeline_depth > 1:
+        plan = plan.pipeline(comm.pipeline_depth)
     return plan
 
 
@@ -294,31 +367,68 @@ def build_plan(comm: CommLike, grad_bytes: float, n_workers: int,
 
 
 def phase_time(ph: CommPhase, param_store, object_store,
-               fn_bw_gbps: float) -> float:
+               fn_bw_gbps: float, segments: int = 1) -> float:
     """One phase's closed-form seconds: per-request latency plus bytes at
     ``min(function pipe, store aggregate / fan_in)`` — the fan-in is the
     static contention divisor (the event engine relaxes it to *actual*
-    overlap on the ``SharedLink``)."""
+    overlap on the ``SharedLink``). With ``segments > 1`` (a pipelined
+    overlappable phase) the payload moves as that many sub-transfers: the
+    bytes term is unchanged, the per-request latency is paid once per
+    segment."""
+    s = max(segments, 1)
     if ph.store == "param":
-        return (param_store.xfer_time(ph.nbytes, concurrent=ph.fan_in,
-                                      per_fn_gbps=fn_bw_gbps)
-                + param_store.latency_s * max(ph.requests - 1, 0))
-    return (object_store.put_time(ph.nbytes, concurrent=ph.fan_in)
-            + object_store.latency_s * max(ph.requests - 1, 0))
+        one = (param_store.xfer_time(ph.nbytes / s, concurrent=ph.fan_in,
+                                     per_fn_gbps=fn_bw_gbps)
+               + param_store.latency_s * max(ph.requests - 1, 0))
+    else:
+        one = (object_store.put_time(ph.nbytes / s, concurrent=ph.fan_in)
+               + object_store.latency_s * max(ph.requests - 1, 0))
+    return one * s
 
 
 def plan_times(plan: CommPlan, param_store, object_store,
                fn_bw_gbps: float) -> Tuple[Dict[str, float], float]:
     """-> (per-phase seconds incl. decompress CPU, store-busy seconds).
 
-    The second value is the time the stores are actually held by
-    transfers — the param-store keep-alive billing basis. Decompress CPU
-    runs on the worker with no store outstanding, so it is in the phase
-    times (wall clock) but **not** in store-busy."""
+    The second value is the time the **param store** is actually held by
+    transfers — the keep-alive billing basis. Only ``store == "param"``
+    phases accrue it: an object-store phase (the Siren-style ``ps_s3``
+    plan) never holds the Redis container, so billing it there would
+    charge for a store the plan does not touch. Decompress CPU runs on
+    the worker with no store outstanding, so it is in the phase times
+    (wall clock) but **not** in store-busy. Overlappable phases of a
+    pipelined plan are priced as ``pipeline_depth`` sub-transfers;
+    hiding them under compute changes the *iteration* wall-clock (see
+    ``overlap_iteration_time``), never the store-busy seconds — a hidden
+    transfer still holds the store while it runs."""
     out: Dict[str, float] = {}
     busy = 0.0
     for ph in plan.phases:
-        t = phase_time(ph, param_store, object_store, fn_bw_gbps)
-        busy += t
+        t = phase_time(ph, param_store, object_store, fn_bw_gbps,
+                       segments=plan.pipeline_depth if ph.overlappable else 1)
+        if ph.store == "param":
+            busy += t
         out[ph.name] = t + ph.cpu_s
     return out, busy
+
+
+def overlap_iteration_time(compute_s: float, hidden_comm_s: float,
+                           exposed_comm_s: float,
+                           depth: int) -> Dict[str, float]:
+    """Closed-form pipelined iteration: compute runs as ``depth``
+    back-to-back segments of ``compute_s / depth``; segment *i*'s share
+    of the overlappable uploads starts once segment *i* lands and queues
+    behind segment *i-1*'s share. The last upload therefore completes at
+
+        ``max(compute, hidden) + min(compute, hidden) / depth``
+
+    (a fill/drain bubble of one segment of the shorter side), after
+    which the exposed phases run sequentially. ``depth=1`` degenerates
+    to the fully sequential ``compute + hidden + exposed``."""
+    c, u = compute_s, hidden_comm_s
+    d = max(depth, 1)
+    window = max(c, u) + min(c, u) / d
+    return {"total": window + exposed_comm_s,
+            "bubble": min(c, u) / d if d > 1 else 0.0,
+            "comm_hidden": (c + u) - window,
+            "comm_exposed": exposed_comm_s + (window - c)}

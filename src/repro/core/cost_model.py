@@ -41,6 +41,7 @@ class EpochEstimate:
     iters: int
     it_breakdown: Dict[str, float]
     restarts_per_worker: int
+    global_batch: int = 0        # samples per iteration (throughput basis)
 
     @property
     def cost_usd(self) -> float:
@@ -49,7 +50,7 @@ class EpochEstimate:
     @property
     def throughput(self) -> float:  # samples / s
         return 0.0 if self.wall_s == 0 else (
-            self.iters * self._gb / self.wall_s)
+            self.iters * self.global_batch / self.wall_s)
 
 
 def epoch_estimate(w: Workload, scheme: CommLike, config: Config,
@@ -70,23 +71,33 @@ def epoch_estimate(w: Workload, scheme: CommLike, config: Config,
     fleet = _config_fleet(config, fleet)
     n, mem = config.workers, config.memory_mb
     if fleet is not None:
+        # an explicit fleet wins over the config shape: n (and total_mem
+        # below) come from it; iteration_time resolves per-worker memory
+        # from the fleet itself
         n = len(fleet)
     samples = samples or w.dataset_samples
     iters = max(math.ceil(samples / global_batch), 1)
     it = iteration_time(w, scheme, n, mem, global_batch, param_store,
                         object_store, fleet=fleet)
 
-    # duration-cap restarts (Section 4.1): amortize init across a full window
+    # duration-cap restarts (Section 4.1): amortize init across a full
+    # window. The per-epoch data fetch runs inside the *first*
+    # invocation's usable window (the engine arms the cap before the
+    # fetch), so it counts against the first window's budget — a
+    # compute load that alone fits one window can still restart once
+    # the fetch is folded in.
     init_s = cold_start_s + framework_init_s
     usable = max_duration_s - init_s - CHECKPOINT_RESTORE_S
     epoch_compute_s = iters * it["total"]
-    invocations_per_worker = max(math.ceil(epoch_compute_s / usable), 1)
-    restart_overhead = (invocations_per_worker - 1) * (init_s + CHECKPOINT_RESTORE_S)
 
     # per-epoch data fetch from the object store (data iterator, Section 4.2)
     shard_bytes = w.sample_bytes * samples / n
     data_fetch_s = object_store.get_time(shard_bytes, concurrent=n)
     n_objects = max(math.ceil(w.sample_bytes * samples / DATA_OBJECT_BYTES), 1)
+
+    invocations_per_worker = max(
+        math.ceil((epoch_compute_s + data_fetch_s) / usable), 1)
+    restart_overhead = (invocations_per_worker - 1) * (init_s + CHECKPOINT_RESTORE_S)
 
     wall = epoch_compute_s + restart_overhead + init_s + data_fetch_s
 
@@ -103,12 +114,11 @@ def epoch_estimate(w: Workload, scheme: CommLike, config: Config,
                     + param_store.memory_gb * 0.004445)
     store_usd = sync_s / 3600.0 * store_hourly
     s3_usd = (n_objects * 0.0004 / 1000.0) * n  # GETs per epoch
-    est = EpochEstimate(wall_s=wall, lambda_usd=lambda_usd,
-                        store_usd=store_usd + s3_usd, iters=iters,
-                        it_breakdown=it,
-                        restarts_per_worker=invocations_per_worker - 1)
-    est._gb = global_batch
-    return est
+    return EpochEstimate(wall_s=wall, lambda_usd=lambda_usd,
+                         store_usd=store_usd + s3_usd, iters=iters,
+                         it_breakdown=it,
+                         restarts_per_worker=invocations_per_worker - 1,
+                         global_batch=global_batch)
 
 
 def profile_cost(w: Workload, scheme: CommLike, config: Config,
@@ -117,13 +127,20 @@ def profile_cost(w: Workload, scheme: CommLike, config: Config,
                  profile_iters: int = 3, *, framework_init_s: float = 4.0,
                  cold_start_s: float = 2.0,
                  fleet: Optional[FleetSpec] = None):
-    """Time+cost of one Bayesian-optimizer profiling probe (k iterations)."""
+    """Time+cost of one Bayesian-optimizer profiling probe (k iterations).
+
+    The deployment an explicit ``fleet=`` describes *wins* over the
+    config's ``(workers, memory_mb)``: n, per-iteration times, and the
+    billed memory all resolve from the fleet, so a probe of a fleet
+    whose shape differs from the config never mixes the two."""
     fleet = _config_fleet(config, fleet)
     n = len(fleet) if fleet is not None else config.workers
-    it = iteration_time(w, scheme, config.workers, config.memory_mb,
-                        global_batch, param_store, object_store, fleet=fleet)
+    mem = (fleet.memories[0] if fleet is not None and fleet.is_homogeneous
+           else config.memory_mb)
+    it = iteration_time(w, scheme, n, mem, global_batch, param_store,
+                        object_store, fleet=fleet)
     total_mem = (fleet.total_memory_mb if fleet is not None
-                 else config.workers * config.memory_mb)
+                 else n * config.memory_mb)
     wall = cold_start_s + framework_init_s + profile_iters * it["total"]
     usd = (total_mem / 1024.0 * wall * LAMBDA_GB_SECOND
            + n * LAMBDA_PER_REQUEST)

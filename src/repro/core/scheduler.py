@@ -111,16 +111,19 @@ class TaskScheduler:
     def _comm_for(self, config: Config):
         """The communication schedule a config deploys: the scheduler's
         default scheme unless the optimizer searched the comm dimensions
-        (``Config.comm``/``compress_ratio``/``branching``)."""
+        (``Config.comm``/``compress_ratio``/``branching``/
+        ``pipeline_depth``)."""
         if (not config.comm and config.compress_ratio >= 1.0
-                and config.branching <= 0):
+                and config.branching <= 0 and config.pipeline_depth <= 1):
             return self.scheme
         base = (parse_scheme(self.scheme) if not config.comm
                 else CommSpec(config.comm))
         return dataclasses.replace(base, ratio=config.compress_ratio,
                                    branching=(config.branching
                                               if base.strategy == "hier"
-                                              else 0))
+                                              else 0),
+                                   pipeline_depth=max(config.pipeline_depth,
+                                                      1))
 
     # -- Bayesian re-optimization (triggered on training-dynamics change) ----
     def optimize(self, w: Workload, batch: int, goal: Goal,
@@ -149,7 +152,8 @@ class TaskScheduler:
                             min(max(warm_start.memory_mb, space.min_memory),
                                 space.max_memory),
                             warm_start.small_frac, warm_start.comm,
-                            warm_start.compress_ratio, warm_start.branching)]
+                            warm_start.compress_ratio, warm_start.branching,
+                            warm_start.pipeline_depth)]
         t_prof = usd_prof = 0.0
         while not bo.done():
             c = seeds.pop(0) if seeds else bo.suggest()

@@ -22,7 +22,20 @@ by phase. The phase DAG contract it honors:
   - ``cpu_s`` (e.g. densifying a compressed payload) computes after the
     transfer, off the link — the store's keep-alive window excludes it;
   - in bsp, ``barrier_after`` joins **all** n workers before anyone
-    proceeds; ssp(k)/async drop the joins and keep only their gates.
+    proceeds; ssp(k)/async drop the joins and keep only their gates;
+  - only ``store == "param"`` phases count toward the param store's
+    keep-alive window — an object-store plan (``ps_s3``) bills the Redis
+    container nothing;
+  - a **pipelined** plan (``CommPlan.pipeline(depth)``) runs each
+    iteration as ``depth`` compute segments with the overlappable
+    leading uploads hidden underneath: the worker state machine gains a
+    second activity slot (a compute lane and a transfer lane running
+    concurrently), segment *i*'s upload share starts once segment *i*'s
+    compute lands and queues behind segment *i-1*'s share, and the
+    phase's barrier joins only after the *last* segment's upload.
+    Duration-cap restarts pause **both** lanes and resume them with
+    their progress; failures and shocks lose both and redo the
+    iteration from its boundary.
 
 This makes the paper's dynamics first-class:
 
@@ -251,6 +264,128 @@ class _WorkerState:
         self.finished = False
 
 
+class _PipelineRun:
+    """One worker's pipelined iteration window: a compute lane and a
+    transfer lane running concurrently (the worker's second activity
+    slot).
+
+    The compute lane runs ``depth`` micro-batch segments back-to-back
+    (gradient accumulation never waits for the network). The transfer
+    lane uploads segment *i*'s share of each overlappable phase —
+    ``nbytes / depth`` with the phase's full ``requests`` round-trips —
+    as soon as segment *i* has landed **and** segment *i-1*'s share has
+    drained (one connection per worker). The window completes when both
+    lanes do; the engine then runs the overlappable phases' deferred
+    barriers and the sequential remainder of the plan.
+
+    A duration-cap preemption pauses both lanes and resumes them with
+    their progress (compute remainder + transfer bytes kept); a shock
+    loses both and redoes the iteration from its boundary."""
+
+    __slots__ = ("eng", "w", "d", "seg_s", "phases", "computed", "ul_seg",
+                 "ul_phase", "tr", "comp_end", "comp_left", "gen",
+                 "computing")
+
+    def __init__(self, eng: "EventEngine", w: "_WorkerState",
+                 total_compute_s: float):
+        self.eng = eng
+        self.w = w
+        self.d = eng.plan.pipeline_depth
+        self.seg_s = total_compute_s / self.d
+        self.phases = [ph for ph in eng._ov_phases if w.wid < ph.fan_in]
+        self.computed = 0            # compute segments landed
+        self.ul_seg = 0              # segments fully uploaded
+        self.ul_phase = 0            # phase index inside the current segment
+        self.tr = None               # in-flight transfer (transfer lane)
+        self.comp_end = 0.0
+        self.comp_left = None        # compute remainder while paused
+        self.gen = 0                 # invalidates scheduled compute ends
+        self.computing = False
+
+    # -- compute lane --------------------------------------------------------
+    def start(self):
+        self.w.activity = ("pipeline", self)
+        self._start_compute(self.seg_s)
+
+    def _start_compute(self, dur: float):
+        self.computing = True
+        self.gen += 1
+        self.comp_end = self.eng.now + dur
+
+        def done(gen=self.gen):
+            if gen != self.gen or not self.computing:
+                return
+            self.computing = False
+            self.computed += 1
+            if self.computed < self.d:
+                self._start_compute(self.seg_s)
+            self._pump_ul()
+            self._maybe_finish()
+
+        self.eng._at(self.comp_end, done)
+
+    # -- transfer lane -------------------------------------------------------
+    def _pump_ul(self):
+        if self.tr is not None or self.ul_seg >= min(self.computed, self.d):
+            return
+        if not self.phases:          # not a participant in any upload
+            self.ul_seg = self.computed
+            return
+
+        ph = self.phases[self.ul_phase]
+
+        def done():
+            self.tr = None
+            self.ul_phase += 1
+            if self.ul_phase >= len(self.phases):
+                self.ul_phase = 0
+                self.ul_seg += 1
+            self._pump_ul()
+            self._maybe_finish()
+
+        self.tr = self.eng._make_transfer(
+            self.w, ph.store, ph.nbytes / self.d, ph.requests, done,
+            is_sync=(ph.store == "param"))
+        self.eng._begin_setup(self.w, self.tr)
+
+    def _maybe_finish(self):
+        if (self.computed >= self.d and self.ul_seg >= self.d
+                and self.tr is None):
+            w = self.w
+            if w.activity is not None and w.activity[0] == "pipeline":
+                w.activity = None
+            self.eng._pipeline_done(w)
+
+    # -- preemption ----------------------------------------------------------
+    def pause(self):
+        """Duration-cap preemption: both lanes keep their progress."""
+        self.gen += 1
+        if self.computing:
+            self.comp_left = max(self.comp_end - self.eng.now, 0.0)
+            self.computing = False
+        else:
+            self.comp_left = None
+        if self.tr is not None:
+            self.eng._detach_transfer(self.tr)
+
+    def resume(self):
+        self.w.activity = ("pipeline", self)
+        if self.tr is not None:
+            self.eng._reattach_transfer(self.w, self.tr)
+        if self.comp_left is not None:
+            self._start_compute(self.comp_left)
+            self.comp_left = None
+
+    def abort(self):
+        """Shock kill: in-flight work on both lanes is lost (the caller
+        redoes the whole iteration from its boundary)."""
+        self.gen += 1
+        self.computing = False
+        if self.tr is not None:
+            self.eng._detach_transfer(self.tr)
+            self.tr = None
+
+
 class EventEngine:
     """Run one epoch of ``workload`` under deployment ``(n, memory_mb)``
     — or a heterogeneous ``fleet`` — as a discrete-event simulation. See
@@ -325,6 +460,19 @@ class EventEngine:
         self.plan: CommPlan = build_plan(
             scheme, workload.grad_bytes, self.n,
             extra_upload_bytes=workload.extra_upload_bytes)
+        # pipelined overlap: the overlappable phases must be a leading
+        # prefix (CommPlan.pipeline guarantees it) — they execute inside
+        # the compute window, the rest from index _ov_count onward
+        flags = [ph.overlappable for ph in self.plan.phases]
+        self._ov_count = 0
+        while self._ov_count < len(flags) and flags[self._ov_count]:
+            self._ov_count += 1
+        if any(flags[self._ov_count:]):
+            raise ValueError("overlappable phases must form a leading "
+                             "prefix of the plan")
+        if self.plan.pipeline_depth <= 1:
+            self._ov_count = 0
+        self._ov_phases = self.plan.phases[:self._ov_count]
         # per-worker function-network caps, carried as per-flow caps on the
         # (possibly cross-job shared) links; *8 as in the analytic model
         self.net_cap = [fn_net_gbps(m) * 8 for m in self.mem]
@@ -391,21 +539,35 @@ class EventEngine:
         for tr in done:
             tr.cb()
 
-    def _start_transfer(self, w: _WorkerState, store: str, nbytes: float,
-                        requests: int, cont: Callable, is_sync: bool = False):
+    def _make_transfer(self, w: _WorkerState, store: str, nbytes: float,
+                       requests: int, done: Callable,
+                       is_sync: bool) -> _Transfer:
+        """Create a transfer whose completion callback ``done`` also
+        settles the sync-window counter. Claiming an activity slot is the
+        caller's job (the serial path uses the worker's single slot, the
+        pipeline window its transfer lane)."""
         link = self.links[store]
 
         def finished():
-            w.activity = None
             if is_sync:
                 self._sync_active -= 1
-            cont()
+            done()
 
         cap = self.net_cap[w.wid] if store == "param" else None
         tr = _Transfer(link, nbytes, link.latency_s * max(requests, 1),
                        finished, is_sync, cap_gbps=cap)
         if is_sync:
             self._sync_active += 1
+        return tr
+
+    def _start_transfer(self, w: _WorkerState, store: str, nbytes: float,
+                        requests: int, cont: Callable, is_sync: bool = False):
+        def finished():
+            w.activity = None
+            cont()
+
+        tr = self._make_transfer(w, store, nbytes, requests, finished,
+                                 is_sync)
         w.activity = ("transfer", tr, tr.cb)
         self._begin_setup(w, tr)
 
@@ -420,9 +582,8 @@ class EventEngine:
             link.setup -= 1
             tr.latency_left = 0.0
             if tr.remaining_gb <= _EPS_GB:
-                w.activity = None
                 self._reschedule(link)           # busy-window bookkeeping
-                tr.cb()
+                tr.cb()                          # cb releases the activity slot
                 return
             link.flows[tr.fid] = tr
             self._reschedule(link)
@@ -519,12 +680,20 @@ class EventEngine:
             _, tr, _cont = act
             self._detach_transfer(tr)
             w.pending = lambda: self._resume_transfer(w, tr)
+        elif kind == "pipeline":
+            _, pr = act
+            pr.pause()                           # both lanes keep progress
+            w.pending = pr.resume
 
-    def _resume_transfer(self, w: _WorkerState, tr: _Transfer):
+    def _reattach_transfer(self, w: _WorkerState, tr: _Transfer):
+        """Put a detached transfer back on its link (keeping progress)."""
         if tr.is_sync:
             self._sync_active += 1
-        w.activity = ("transfer", tr, tr.cb)
         self._begin_setup(w, tr)
+
+    def _resume_transfer(self, w: _WorkerState, tr: _Transfer):
+        w.activity = ("transfer", tr, tr.cb)
+        self._reattach_transfer(w, tr)
 
     def _cap_fire(self, w: _WorkerState, gen: int):
         if gen != w.cap_gen or w.finished or w.restarting:
@@ -609,6 +778,9 @@ class EventEngine:
             redo = act[2]
             w.pending = redo if redo is not None else (
                 lambda: self._compute_phase(w))
+        elif act[0] == "pipeline":               # both lanes are lost
+            act[1].abort()
+            w.pending = lambda: self._compute_phase(w)
         else:                                    # transfer: bytes are lost
             _, tr, _cont = act
             self._detach_transfer(tr)
@@ -698,7 +870,29 @@ class EventEngine:
                                  w, lambda: self._compute_phase(w)))
             return
         self._tr(w, f"compute it{w.it}")
+        if self._ov_count:
+            # pipelined plan: compute and the overlappable uploads run
+            # as two concurrent lanes inside one window
+            return _PipelineRun(self, w, d).start()
         self._do_compute(w, d, lambda: self._comm_phase(w, 0))
+
+    def _pipeline_done(self, w: _WorkerState):
+        """Both lanes of the overlap window drained: run the deferred
+        barriers of the overlappable phases (bsp), then the sequential
+        remainder of the plan."""
+        if self._stopping:
+            return self._finish_worker(w)        # discard partial iteration
+        self._chain_ov_barriers(w, 0)
+
+    def _chain_ov_barriers(self, w: _WorkerState, i: int):
+        if i >= self._ov_count:
+            return self._comm_phase(w, self._ov_count)
+        ph = self.plan.phases[i]
+        nxt = lambda: self._chain_ov_barriers(w, i + 1)  # noqa: E731
+        if self.mode == "bsp" and ph.barrier_after:
+            self._barrier((ph.name, w.it), w, nxt)
+        else:
+            nxt()
 
     def _comm_phase(self, w: _WorkerState, pi: int):
         """Execute the plan's phases generically: workers ``0..fan_in-1``
@@ -732,8 +926,10 @@ class EventEngine:
             else:
                 advance()
 
+        # only param-store phases hold the Redis container: an
+        # object-store plan (ps_s3) accrues no keep-alive billing
         self._start_transfer(w, ph.store, ph.nbytes, ph.requests, done,
-                             is_sync=True)
+                             is_sync=(ph.store == "param"))
 
     def _iteration_done(self, w: _WorkerState):
         w.it += 1

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.comm import (CommLike, CommPlan, CommSpec, build_plan,
-                             plan_times)
+                             overlap_iteration_time, plan_times)
 from repro.serverless.platform import FleetSpec, fn_gflops, fn_net_gbps
 from repro.serverless.stores import ObjectStore, ParamStore
 
@@ -111,8 +111,15 @@ def iteration_time(w: Workload, scheme: CommLike, n_workers: int,
     synchronization keeps the min-bandwidth bound (narrowest worker's
     pipe). Besides ``compute``/``comm``/``total`` and the per-phase
     entries, the breakdown carries ``store_busy`` — the seconds the
-    stores are held by transfers (the keep-alive billing basis, which
-    excludes any decompress CPU in ``comm``)."""
+    param store is held by transfers (the keep-alive billing basis,
+    which excludes any decompress CPU in ``comm`` and every
+    object-store phase). A pipelined plan (``pipeline_depth > 1``)
+    prices the iteration as ``max(compute, hidden comm) + exposed comm
+    + bubble`` — the overlappable uploads hide under segmented compute
+    — and reports the split under ``comm_hidden`` / ``comm_exposed`` /
+    ``bubble`` (``comm`` stays the total communication *work*, hidden
+    or not; ``store_busy`` is likewise unchanged by overlap, since a
+    hidden transfer still holds the store)."""
     n_workers = len(fleet) if fleet is not None else n_workers
     if fleet is None or fleet.is_homogeneous:
         mem = fleet.memories[0] if fleet is not None else memory_mb
@@ -128,8 +135,14 @@ def iteration_time(w: Workload, scheme: CommLike, n_workers: int,
     plan = build_plan(scheme, w.grad_bytes, n_workers,
                       extra_upload_bytes=w.extra_upload_bytes)
     comm, store_busy = plan_times(plan, param_store, object_store, fn_net * 8)
+    hidden_names = {ph.name for ph in plan.overlappable_phases}
+    hidden = sum(t for name, t in comm.items() if name in hidden_names)
+    exposed = sum(comm.values()) - hidden
+    ov = overlap_iteration_time(comp, hidden, exposed, plan.pipeline_depth)
     return {"compute": comp, "comm": sum(comm.values()),
-            "total": comp + sum(comm.values()), "store_busy": store_busy,
+            "total": ov["total"], "store_busy": store_busy,
+            "comm_hidden": ov["comm_hidden"],
+            "comm_exposed": ov["comm_exposed"], "bubble": ov["bubble"],
             **comm}
 
 
@@ -201,6 +214,11 @@ class LocalWorkerPool:
         (``repro.core.compression``); the aggregator sums the sparse
         contributions. ``ratio=1.0`` keeps every entry — numerically the
         dense mean.
+      - a pipelined plan (``pipeline_depth > 1``): each worker computes
+        its slice as micro-batched gradient accumulation — the schedule
+        the simulator overlaps with the uploads; the weighted
+        per-segment mean equals the full-slice gradient, so overlap
+        never changes the numerics.
 
     ``use_kernel=True`` runs the shard aggregation (step 3 of Fig. 5)
     through the Pallas ``hier_agg`` kernel instead of numpy.
@@ -263,6 +281,35 @@ class LocalWorkerPool:
             self._vers[w] = self._iter
         return self._snaps[w]
 
+    def _slice_grad(self, params, sl):
+        """One worker's gradient on its batch slice. A pipelined plan
+        (``pipeline_depth > 1``) computes it as micro-batched gradient
+        accumulation — the schedule the simulator overlaps with uploads:
+        per-segment gradients are combined with segment-size weights,
+        which for a per-batch-mean loss *is* the full-slice gradient, so
+        overlap changes the timing model and never the numerics."""
+        d = self.plan.pipeline_depth
+        rows = jax.tree.leaves(sl)[0].shape[0]
+        if d <= 1 or rows < 2:
+            return self.grad_fn(params, sl)
+        d = min(d, rows)
+        bounds = [round(i * rows / d) for i in range(d + 1)]
+        acc, total = None, 0
+        for a, b in zip(bounds, bounds[1:]):
+            if b <= a:
+                continue
+            micro = jax.tree.map(lambda x: x[a:b], sl)
+            g = self.grad_fn(params, micro)
+            wgt = float(b - a)
+            if acc is None:
+                acc = jax.tree.map(lambda x: np.asarray(x, np.float32) * wgt,
+                                   g)
+            else:
+                acc = jax.tree.map(
+                    lambda s, x: s + np.asarray(x, np.float32) * wgt, acc, g)
+            total += wgt
+        return jax.tree.map(lambda s: s / total, acc)
+
     def _worker_grads(self, params, global_batch):
         """Each worker's flat gradient on its batch slice (stale-aware)."""
         n = self.n
@@ -271,7 +318,7 @@ class LocalWorkerPool:
             sl = jax.tree.map(
                 lambda x: x[w * (x.shape[0] // n):(w + 1) * (x.shape[0] // n)],
                 global_batch)
-            g = self.grad_fn(self._worker_params(w, params), sl)
+            g = self._slice_grad(self._worker_params(w, params), sl)
             flats.append(flatten_grads(g))
             g_like = g
         return flats, g_like

@@ -1,13 +1,15 @@
-"""CommPlan IR: strategy constructors, the compress transform, closed-form
-pricing, the water-filling SharedLink, and load-aware shard placement —
-the one communication schedule all three execution layers consume."""
+"""CommPlan IR: strategy constructors, the compress and pipeline
+transforms, closed-form pricing (overlap included), the water-filling
+SharedLink, and load-aware shard placement — the one communication
+schedule all three execution layers consume."""
 import math
 
 import numpy as np
 import pytest
 
 from repro.core import Config
-from repro.core.comm import (CommSpec, build_plan, hier, parse_scheme, ps,
+from repro.core.comm import (CommSpec, build_plan, hier,
+                             overlap_iteration_time, parse_scheme, ps,
                              scatter_reduce)
 from repro.core.cost_model import epoch_estimate
 from repro.serverless import (WORKLOADS, EventEngine, FleetSpec, ObjectStore,
@@ -131,6 +133,158 @@ def test_compress_ratio_one_is_dense():
     assert plan.compress(0.05).compress(1.0).phases == plan.phases
     with pytest.raises(ValueError):
         plan.compress(0.0)
+
+
+# -- pipeline (overlap) transform ---------------------------------------------
+
+def test_pipeline_marks_only_leading_uploads():
+    """Only the pre-barrier upload run — the phases moving the worker's
+    own gradient — may hide under compute; everything after the first
+    barrier or download stays sequential."""
+    for make, first in ((lambda: ps(G, 16), "UL-grad"),
+                        (lambda: scatter_reduce(G, 16), "UL-Shard"),
+                        (lambda: hier(G, 16, branching=4), "UL-l1")):
+        plan = make().pipeline(4)
+        assert plan.pipeline_depth == 4
+        ov = [ph.name for ph in plan.overlappable_phases]
+        assert ov == [first], ov
+        # barrier semantics preserved on the (deferred) phase itself
+        by = {ph.name: ph for ph in plan.phases}
+        assert by[first].barrier_after
+        assert all(not ph.overlappable for ph in plan.phases
+                   if ph.name != first)
+
+
+def test_pipeline_depth_one_is_identity():
+    plan = scatter_reduce(G, 16)
+    assert plan.pipeline(1).phases == plan.phases
+    assert plan.pipeline(1).pipeline_depth == 1
+    # round-trip: un-pipelining a pipelined plan rebuilds the original
+    assert plan.pipeline(4).pipeline(1).phases == plan.phases
+    with pytest.raises(ValueError):
+        plan.pipeline(0)
+    with pytest.raises(ValueError):
+        CommSpec("ps", pipeline_depth=0)
+
+
+def test_pipeline_commutes_with_compress():
+    a = scatter_reduce(G, 16).compress(0.05).pipeline(4)
+    b = scatter_reduce(G, 16).pipeline(4).compress(0.05)
+    assert a.phases == b.phases
+    assert a.wire_bytes == pytest.approx(b.wire_bytes)
+    # the transform moves no extra bytes
+    assert a.wire_bytes == pytest.approx(
+        scatter_reduce(G, 16).compress(0.05).wire_bytes)
+
+
+def test_overlap_iteration_time_formula():
+    """max(compute, hidden) + exposed + bubble, with the bubble one
+    segment of the shorter side; depth=1 degenerates to the serial sum
+    and depth→∞ hides min(compute, hidden) entirely."""
+    seq = overlap_iteration_time(10.0, 6.0, 3.0, 1)
+    assert seq["total"] == pytest.approx(19.0)
+    assert seq["comm_hidden"] == 0.0 and seq["bubble"] == 0.0
+    d4 = overlap_iteration_time(10.0, 6.0, 3.0, 4)
+    assert d4["total"] == pytest.approx(10.0 + 6.0 / 4 + 3.0)
+    assert d4["comm_hidden"] == pytest.approx(6.0 * (1 - 1 / 4))
+    assert d4["bubble"] == pytest.approx(6.0 / 4)
+    # comm-bound: compute hides under comm instead
+    cb = overlap_iteration_time(4.0, 12.0, 3.0, 4)
+    assert cb["total"] == pytest.approx(12.0 + 4.0 / 4 + 3.0)
+    # monotone in depth, floored at max(c, u) + exposed
+    totals = [overlap_iteration_time(10.0, 9.0, 3.0, d)["total"]
+              for d in (1, 2, 4, 8, 64)]
+    assert all(a >= b for a, b in zip(totals, totals[1:]))
+    assert totals[-1] == pytest.approx(10.0 + 9.0 / 64 + 3.0)
+
+
+def test_iteration_time_overlap_pricing_and_store_busy():
+    """The pipelined iteration prices as max(compute, hidden) + exposed
+    + bubble, while store-busy (keep-alive billing) stays the full
+    transfer time — a hidden upload still holds the store."""
+    ps_, os_ = ParamStore(), ObjectStore()
+    seq = iteration_time(W, CommSpec("scatter_reduce"), 64, 4096, 512,
+                         ps_, os_)
+    d8 = iteration_time(W, CommSpec("scatter_reduce", pipeline_depth=8), 64,
+                        4096, 512, ps_, os_)
+    assert seq["comm_hidden"] == 0.0 and seq["bubble"] == 0.0
+    assert d8["comm_hidden"] > 0.0
+    assert d8["total"] < seq["total"]
+    # what's hidden comes straight off the serial sum
+    assert d8["total"] == pytest.approx(
+        d8["compute"] + d8["comm"] - d8["comm_hidden"], rel=1e-9)
+    # billing basis unchanged by overlap (up to the extra per-segment
+    # request latency of the 8 sub-transfers)
+    assert d8["store_busy"] >= seq["store_busy"]
+    assert d8["store_busy"] == pytest.approx(seq["store_busy"], rel=0.05)
+
+
+PIPELINED = (CommSpec("ps", pipeline_depth=4),
+             CommSpec("scatter_reduce", pipeline_depth=4),
+             CommSpec("hier", branching=4, pipeline_depth=4),
+             CommSpec("scatter_reduce", ratio=0.05, pipeline_depth=4),
+             CommSpec("ps", store="object", pipeline_depth=2))
+
+
+@pytest.mark.parametrize("spec", PIPELINED,
+                         ids=lambda s: f"{s.strategy}-{s.store}-r{s.ratio}")
+def test_pipelined_zero_variance_engine_matches_analytic(spec):
+    """Acceptance: pipelined plans execute on both paths with the
+    engine-vs-analytic zero-variance gap ≤ 1% — compressed and S3-backed
+    variants included."""
+    est = epoch_estimate(W, spec, Config(16, 4096), 1024, ParamStore(),
+                         ObjectStore(), samples=10_000)
+    r = EventEngine(W, spec, 16, 4096, 1024, ParamStore(), ObjectStore(),
+                    samples=10_000, seed=0).run()
+    assert r.wall_s == pytest.approx(est.wall_s, rel=0.01), spec
+    assert r.cost_usd == pytest.approx(est.cost_usd, rel=0.01), spec
+    assert r.iters_done == est.iters
+
+
+def test_overlap_wins_when_comm_near_compute():
+    """At a comm/compute ratio near 1 the pipelined plan must strictly
+    beat the sequential one on both paths — and depth=1 must reproduce
+    the sequential engine trace bit-for-bit."""
+    kw = dict(samples=4_096, seed=0)
+    seq = EventEngine(W, CommSpec("scatter_reduce"), 64, 4096, 512,
+                      ParamStore(), ObjectStore(), **kw).run()
+    d1 = EventEngine(W, CommSpec("scatter_reduce", pipeline_depth=1), 64,
+                     4096, 512, ParamStore(), ObjectStore(), **kw).run()
+    d4 = EventEngine(W, CommSpec("scatter_reduce", pipeline_depth=4), 64,
+                     4096, 512, ParamStore(), ObjectStore(), **kw).run()
+    assert d1.trace == seq.trace and d1.wall_s == seq.wall_s
+    assert d4.wall_s < seq.wall_s
+    est_seq = epoch_estimate(W, "hier", Config(64, 4096), 512, ParamStore(),
+                             ObjectStore(), samples=4_096)
+    est_d4 = epoch_estimate(W, CommSpec("scatter_reduce", pipeline_depth=4),
+                            Config(64, 4096), 512, ParamStore(),
+                            ObjectStore(), samples=4_096)
+    assert est_d4.wall_s < est_seq.wall_s
+
+
+# -- ps_s3 keep-alive billing (headline bugfix) -------------------------------
+
+def test_ps_s3_bills_no_param_store_keepalive():
+    """Satellite (headline): the Siren-style S3 plan moves gradients
+    through the *object* store — the Redis param store must accrue zero
+    keep-alive seconds on both paths, and their store bills must agree
+    (S3 data GETs only)."""
+    it = iteration_time(W, "ps_s3", 16, 4096, 1024, ParamStore(),
+                        ObjectStore())
+    assert it["store_busy"] == 0.0
+    param = ParamStore()
+    est = epoch_estimate(W, "ps_s3", Config(16, 4096), 1024, param,
+                         ObjectStore(), samples=10_000)
+    eng_param = ParamStore()
+    r = EventEngine(W, "ps_s3", 16, 4096, 1024, eng_param, ObjectStore(),
+                    samples=10_000, seed=0).run()
+    assert r.sync_s == 0.0 and r.store_billed_s == 0.0
+    assert eng_param.alive_seconds == 0.0
+    assert r.store_usd == pytest.approx(est.store_usd, rel=1e-9)
+    # the param-store path still bills keep-alive, and more than ps_s3
+    est_ps = epoch_estimate(W, "ps", Config(16, 4096), 1024, ParamStore(),
+                            ObjectStore(), samples=10_000)
+    assert est_ps.store_usd > est.store_usd
 
 
 # -- closed-form pricing ------------------------------------------------------

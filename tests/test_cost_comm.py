@@ -1,4 +1,6 @@
 """Cost model + communication model properties (paper Sections 3.3, 4.3)."""
+import dataclasses
+
 import numpy as np
 import pytest
 try:
@@ -8,10 +10,12 @@ except ImportError:                      # optional dep: fixed example cases
     from hypothesis_fallback import given, settings, st
 
 from repro.core import Config
-from repro.core.cost_model import epoch_estimate, vm_epoch_estimate, VM_TYPES
-from repro.serverless import (WORKLOADS, ObjectStore, ParamStore,
-                              comm_breakdown, iteration_time)
+from repro.core.cost_model import (VM_TYPES, epoch_estimate, profile_cost,
+                                   vm_epoch_estimate)
+from repro.serverless import (WORKLOADS, EventEngine, FleetSpec, ObjectStore,
+                              ParamStore, comm_breakdown, iteration_time)
 from repro.serverless.platform import fn_gflops, fn_net_gbps
+from repro.serverless.worker import Workload
 
 W = WORKLOADS["bert-small"]
 
@@ -74,6 +78,66 @@ def test_atari_extra_upload_slows_comm():
     extra = comm_breakdown("hier", rl.grad_bytes, 32, 4096, ps, os_,
                            extra_upload_bytes=rl.extra_upload_bytes)
     assert sum(extra.values()) > sum(no_extra.values())
+
+
+def test_profile_cost_resolves_fleet_over_config_shape():
+    """Satellite: an explicit ``fleet=`` wins over the config's
+    (workers, memory): a probe of an 8×2048 fleet under a mismatched
+    32×4096 config must price identically to the honest 8×2048 config —
+    n, iteration times, GB-seconds, and requests all from the fleet."""
+    ps_, os_ = _stores()
+    fleet = FleetSpec.homogeneous(8, 2048)
+    wall_f, usd_f, it_f = profile_cost(W, "hier", Config(32, 4096), 1024,
+                                       ps_, os_, fleet=fleet)
+    wall_h, usd_h, it_h = profile_cost(W, "hier", Config(8, 2048), 1024,
+                                       ps_, os_)
+    assert wall_f == pytest.approx(wall_h, rel=1e-12)
+    assert usd_f == pytest.approx(usd_h, rel=1e-12)
+    assert it_f == pytest.approx(it_h)
+    # same for epoch_estimate (the other fleet-aware closed form)
+    est_f = epoch_estimate(W, "hier", Config(32, 4096), 1024, ps_, os_,
+                           samples=20_000, fleet=fleet)
+    est_h = epoch_estimate(W, "hier", Config(8, 2048), 1024, ps_, os_,
+                           samples=20_000)
+    assert est_f.wall_s == pytest.approx(est_h.wall_s, rel=1e-12)
+    assert est_f.cost_usd == pytest.approx(est_h.cost_usd, rel=1e-12)
+
+
+def test_epoch_estimate_throughput_is_a_real_field():
+    """Satellite: ``global_batch`` is a dataclass field, so
+    ``dataclasses.replace`` and independent construction keep
+    ``throughput`` working (no bolted-on ``_gb`` attribute)."""
+    ps_, os_ = _stores()
+    est = epoch_estimate(W, "hier", Config(16, 4096), 1024, ps_, os_,
+                         samples=20_000)
+    assert est.global_batch == 1024
+    assert est.throughput == pytest.approx(est.iters * 1024 / est.wall_s)
+    doubled = dataclasses.replace(est, wall_s=est.wall_s * 2)
+    assert doubled.throughput == pytest.approx(est.throughput / 2)
+    fresh = type(est)(wall_s=10.0, lambda_usd=0.0, store_usd=0.0, iters=5,
+                      it_breakdown={}, restarts_per_worker=0,
+                      global_batch=100)
+    assert fresh.throughput == pytest.approx(50.0)
+
+
+def test_restart_count_folds_data_fetch_into_first_window():
+    """Satellite: the engine runs the per-epoch data fetch inside the
+    first invocation's cap window, so a compute load that alone fits one
+    window can still restart once the fetch is folded in — the analytic
+    count must agree (and the engine must reproduce the wall-clock)."""
+    ps_, os_ = _stores()
+    # ~874 s of compute (fits the 892.5 s usable window) + ~30 s fetch
+    w = Workload("cap-probe", 1_000_000, 7.9e10, 5.3e6, 2_048)
+    est = epoch_estimate(w, "ps", Config(4, 2048), 512, ps_, os_)
+    usable = 900.0 - 6.0 - 1.5
+    epoch_compute = est.iters * est.it_breakdown["total"]
+    assert epoch_compute <= usable           # the old formula said 0 restarts
+    assert est.restarts_per_worker == 1      # the fetch pushes past the cap
+    r = EventEngine(w, "ps", 4, 2048, 512, ParamStore(), ObjectStore(),
+                    seed=0).run()
+    assert r.restarts == 4
+    assert r.wall_s == pytest.approx(est.wall_s, rel=0.01)
+    assert r.cost_usd == pytest.approx(est.cost_usd, rel=0.01)
 
 
 def test_vm_baseline_costs():

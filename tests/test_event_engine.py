@@ -75,15 +75,21 @@ def test_identical_fleet_matches_homogeneous_and_analytic(name, scheme, n,
 
 
 STRATEGIES = [CommSpec("ps"), CommSpec("scatter_reduce"),
-              CommSpec("hier", branching=4)]
+              CommSpec("hier", branching=4),
+              # overlap rows: the same strategies with a pipelined window
+              CommSpec("ps", pipeline_depth=4),
+              CommSpec("scatter_reduce", pipeline_depth=4),
+              CommSpec("hier", branching=4, pipeline_depth=4)]
 MODES = ["bsp", "ssp(2)", "async"]
 
 
 @pytest.mark.parametrize("spec", STRATEGIES,
-                         ids=[s.strategy for s in STRATEGIES])
+                         ids=[f"{s.strategy}-d{s.pipeline_depth}"
+                              for s in STRATEGIES])
 @pytest.mark.parametrize("mode", MODES)
 def test_zero_variance_strategy_sync_matrix(spec, mode):
-    """The {ps, scatter_reduce, hier} x {bsp, ssp, async} matrix: at zero
+    """The {ps, scatter_reduce, hier} x {bsp, ssp, async} matrix, with and
+    without compute∥comm overlap (``pipeline_depth=4``): at zero
     variance the engine must reproduce the closed form within 1% for
     every symmetric plan (all workers run every phase, so lockstep holds
     with or without barriers). The hier tree is asymmetric: without
@@ -303,6 +309,28 @@ def test_ssp0_is_exactly_bsp():
                                   sync_mode="ssp(0)"),
                   params0, batch, loss_fn)
     np.testing.assert_array_equal(bsp, ssp0)
+
+
+def test_pipelined_pool_matches_sequential_numerics():
+    """A pipelined plan maps to micro-batched gradient accumulation in
+    the semantic pool: the weighted per-segment mean *is* the full-slice
+    gradient, so overlap changes the timing model and never the
+    training numerics — across strategies and depths (including a depth
+    that doesn't divide the slice)."""
+    import jax
+    params0, batch, grad_fn, loss_fn = _tiny_model()
+    base = LocalWorkerPool(grad_fn, 4, ParamStore()).step(params0, batch)
+    flat = np.concatenate([np.asarray(x).ravel()
+                           for x in jax.tree.leaves(base)])
+    for spec in (CommSpec("scatter_reduce", pipeline_depth=2),
+                 CommSpec("ps", pipeline_depth=4),
+                 CommSpec("hier", branching=2, pipeline_depth=3)):
+        pool = LocalWorkerPool(grad_fn, 4, ParamStore(), plan=spec)
+        g = pool.step(params0, batch)
+        f = np.concatenate([np.asarray(x).ravel()
+                            for x in jax.tree.leaves(g)])
+        np.testing.assert_allclose(f, flat, rtol=1e-4, atol=1e-6,
+                                   err_msg=str(spec))
 
 
 def test_ssp_and_async_converge_on_quickstart_model():

@@ -146,14 +146,15 @@ def test_fleet_config_estimate_and_search_space():
     fracs = {c.small_frac for c in cands}
     assert fracs == set(space.small_frac_choices)
     # the GP input embeds every search dimension, incl. the comm plan
-    assert all(len(c.as_unit(space)) == 6 for c in cands)
-    assert all(c.comm == "" and c.compress_ratio == 1.0 for c in cands)
+    assert all(len(c.as_unit(space)) == 7 for c in cands)
+    assert all(c.comm == "" and c.compress_ratio == 1.0
+               and c.pipeline_depth == 1 for c in cands)
 
 
 def test_comm_search_space_samples_plans():
-    """search_comm adds (strategy, ratio, branching) candidates; every
-    choice appears, branching only rides on hier, and the unit embedding
-    stays in [0, 1]."""
+    """search_comm adds (strategy, ratio, branching, pipeline_depth)
+    candidates; every choice appears, branching only rides on hier, and
+    the unit embedding stays in [0, 1]."""
     space = ConfigSpace(max_workers=32, search_comm=True)
     cands = space.sample(np.random.RandomState(0), 256)
     assert {c.comm for c in cands} == set(space.comm_choices)
@@ -161,9 +162,10 @@ def test_comm_search_space_samples_plans():
     assert {c.branching for c in cands if c.comm == "hier"} == \
         set(space.branching_choices)
     assert all(c.branching == 0 for c in cands if c.comm != "hier")
+    assert {c.pipeline_depth for c in cands} == set(space.depth_choices)
     for c in cands:
         u = c.as_unit(space)
-        assert len(u) == 6 and (u >= 0.0).all() and (u <= 1.0).all()
+        assert len(u) == 7 and (u >= 0.0).all() and (u <= 1.0).all()
 
 
 def test_optimizer_selects_nontrivial_comm_plan():
@@ -192,6 +194,33 @@ def test_optimizer_selects_nontrivial_comm_plan():
                                cfg, 1024, ParamStore(), ObjectStore(),
                                samples=25_000)
     assert est_sel.wall_s < est_dense.wall_s
+
+
+def test_scheduler_deploys_pipelined_comm_on_both_paths():
+    """A config carrying a searched ``pipeline_depth`` must deploy the
+    overlapped schedule on the analytic *and* the event path — and beat
+    its sequential twin on a comm-heavy deployment."""
+    walls = {}
+    for engine in ("analytic", "event"):
+        for depth in (1, 4):
+            plat = ServerlessPlatform(seed=0)
+            sched = TaskScheduler(plat, ObjectStore(), ParamStore(), seed=0,
+                                  scheme="scatter_reduce",
+                                  space=ConfigSpace(max_workers=64),
+                                  engine=engine)
+            cfg = Config(64, 4096, pipeline_depth=depth)
+            spec = sched._comm_for(cfg)
+            assert (spec == "scatter_reduce" if depth == 1
+                    else spec.pipeline_depth == depth)
+            res = sched.run([EpochPlan(512, W, samples=4_096)],
+                            Goal("min_time"), adaptive=False,
+                            fixed_config=cfg)
+            walls[(engine, depth)] = res.wall_s
+    assert walls[("analytic", 4)] < walls[("analytic", 1)]
+    assert walls[("event", 4)] < walls[("event", 1)]
+    # both paths agree on the overlapped epoch at zero variance
+    assert walls[("event", 4)] == pytest.approx(walls[("analytic", 4)],
+                                                rel=0.01)
 
 
 def test_scheduler_deploys_searched_fleet_on_event_engine():
