@@ -23,8 +23,10 @@ from __future__ import annotations
 
 import sys
 
+from repro.core import ConfigSpace, Goal
 from repro.serverless import (WORKLOADS, ContentionDomain, EventEngine,
                               ObjectStore, ParamStore)
+from repro.workflow import BudgetAllocator, TaskSpec, WorkflowDAG
 from benchmarks.common import emit_json
 
 JOBS = {
@@ -92,17 +94,64 @@ def run(quick: bool = False) -> list:
         # what each job is actually billed: its share of the union
         "billed_s": {n: round(shared[n].store_billed_s, 2) for n in names},
     })
+    rows.append(_priority_share_row(samples))
     return rows
+
+
+# priorities for the weighted-share scenario: jobA is the production job
+PRIORITIES = {"jobA-hier": 3, "jobB-ps": 1}
+
+
+def _priority_share_row(samples) -> dict:
+    """Cross-job *fairness* (ROADMAP open item), first measurable
+    scenario: the workflow layer's ``BudgetAllocator`` splits one shared
+    budget across the two contending jobs by
+    ``forecast-cost x priority`` weight, and converts each grant into a
+    worker window — the priority knob visibly changes both the dollars
+    and the fleet scale each job is entitled to."""
+    specs = []
+    for name, (w, _scheme, _n, _mem, batch) in JOBS.items():
+        specs.append(TaskSpec(name, w, epochs=1, batch_size=batch,
+                              samples=samples[name],
+                              priority=PRIORITIES[name]))
+    dag = WorkflowDAG(specs)
+    goal = Goal("deadline_budget", deadline_s=7200.0, budget_usd=30.0)
+    alloc = BudgetAllocator(dag, goal, ParamStore(), ObjectStore(),
+                            space=ConfigSpace(max_workers=64))
+    grants, _ = alloc.allocate(now_s=0.0, spent_usd=0.0, running={},
+                               finished=set(), dropped=set(),
+                               ready=list(JOBS))
+    a, b = grants["jobA-hier"], grants["jobB-ps"]
+    # the higher-priority job is entitled to the larger weighted share of
+    # budget and fleet (its forecast is also the cheaper of the two, so
+    # any inversion here would mean the priority knob is dead)
+    assert a.budget_usd > b.budget_usd
+    assert a.max_workers >= b.max_workers
+    return {
+        "figure": "multi_job", "job": "priority-weighted-share",
+        "priorities": dict(PRIORITIES),
+        "grant_usd": {n: round(grants[n].budget_usd, 4) for n in JOBS},
+        "grant_share": {n: round(grants[n].budget_usd
+                                 / sum(g.budget_usd
+                                       for g in grants.values()), 3)
+                        for n in JOBS},
+        "workers": {n: [grants[n].min_workers, grants[n].max_workers]
+                    for n in JOBS},
+        "budget_usd": goal.budget_usd,
+    }
 
 
 def summarize(rows) -> str:
     jobs = [r for r in rows if "slowdown_shared" in r]
     ka = next(r for r in rows if r["job"] == "store-keep-alive")
+    pr = next(r for r in rows if r["job"] == "priority-weighted-share")
     parts = [f"{r['job']} {r['slowdown_shared']:.2f}x shared "
              f"(control {r['slowdown_control']:.2f}x)" for r in jobs]
+    shares = "/".join(f"{pr['grant_share'][n]:.2f}" for n in JOBS)
     return ("; ".join(parts)
             + f"; keep-alive union {ka['sync_union_s']}s vs per-job sum "
-              f"{ka['sync_sum_s']}s ({ka['overlap_s']}s overlap)")
+              f"{ka['sync_sum_s']}s ({ka['overlap_s']}s overlap)"
+            + f"; priority shares {shares}")
 
 
 if __name__ == "__main__":

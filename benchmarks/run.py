@@ -26,7 +26,7 @@ from benchmarks import (async_staleness, comm_breakdown, comm_scaling,
                         multi_job, nas_adaptation, online_learning,
                         optimizer_compare, overlap_pipeline, roofline,
                         scenarios, serving_slo, shard_ablation,
-                        straggler_tail)
+                        straggler_tail, workflow_hpo)
 
 BENCHES = {
     "fig1_2_8_comm_scaling": comm_scaling,
@@ -45,15 +45,18 @@ BENCHES = {
     "event_async_staleness": async_staleness,
     "event_hetero_fleet": hetero_fleet,
     "event_multi_job": multi_job,
+    "workflow_hpo": workflow_hpo,
     "kernels": kernels_bench,
     "roofline": roofline,
 }
 
 # the CI smoke set: the event-path benchmarks (cheap, no BO search inside)
-# plus one analytic module, all at reduced scale where supported
+# plus one analytic module, all at reduced scale where supported;
+# workflow_hpo runs the orchestrator end to end (successive halving vs
+# uniform HPO under one deadline+budget) with reduced rung samples
 QUICK = ["fig7_comm_breakdown", "comm_strategies", "overlap_pipeline",
          "event_straggler_tail", "event_async_staleness",
-         "event_hetero_fleet", "event_multi_job"]
+         "event_hetero_fleet", "event_multi_job", "workflow_hpo"]
 
 
 def _run_mod(mod, quick: bool):

@@ -2,6 +2,9 @@
 
 Scenario 1: "finish within --deadline seconds, as cheap as possible."
 Scenario 2: "spend at most --budget dollars, as fast as possible."
+Scenario 3: a whole *workflow* — train -> fine-tune -> eval — under ONE
+            deadline and ONE budget, split and re-split across the tasks
+            by the workflow layer's BudgetAllocator.
 
 Run:  PYTHONPATH=src python examples/deadline_budget.py --deadline 3600 --budget 50
 """
@@ -39,6 +42,46 @@ def show(title, res, goal):
               f"{'MET' if res.total_cost <= goal.budget_usd else 'MISSED'}")
 
 
+def show_workflow(title, res, goal):
+    print(f"\n{title}")
+    for name in res.tasks:
+        r = res.tasks[name]
+        cfg = res.config_of(name)
+        grant = res.allocations[name].budget_usd
+        print(f"  {name:<10} [{res.start_s[name]:7.0f}s ->"
+              f" {res.finish_s[name]:7.0f}s]  epochs={r.epochs_done}"
+              f"  workers={cfg.workers if cfg else 0:>3}"
+              f"  ${r.total_cost:6.3f} of ${grant:6.3f} granted")
+    print(f"  workflow:    {res.wall_s:,.0f} s, ledger ${res.ledger_usd:.2f}"
+          f" (deadline {goal.deadline_s:,.0f} s ->"
+          f" {'MET' if res.wall_s <= goal.deadline_s else 'MISSED'};"
+          f" budget ${goal.budget_usd:.2f} ->"
+          f" {'MET' if res.ledger_usd <= goal.budget_usd else 'MISSED'})")
+
+
+def run_workflow(args):
+    from repro.core import ConfigSpace
+    from repro.serverless import ObjectStore, ParamStore, ServerlessPlatform
+    from repro.workflow import TaskSpec, WorkflowDAG, WorkflowOrchestrator
+    w = WORKLOADS[args.model]
+    small = max(args.samples // 4, 1024)
+    dag = WorkflowDAG([
+        TaskSpec("train", w, epochs=max(args.epochs - 2, 1),
+                 batch_size=1024, samples=args.samples),
+        TaskSpec("finetune", w, epochs=1, batch_size=1024, samples=small,
+                 deps=("train",), kind="finetune", warm_start_from="train",
+                 priority=2),
+        TaskSpec("eval", w, epochs=1, batch_size=1024, samples=small,
+                 deps=("finetune",), kind="eval"),
+    ])
+    goal = Goal("deadline_budget", deadline_s=args.deadline,
+                budget_usd=args.budget)
+    orch = WorkflowOrchestrator(
+        dag, goal, ServerlessPlatform(seed=0), ObjectStore(), ParamStore(),
+        space=ConfigSpace(max_workers=200), engine="analytic", seed=0)
+    return orch.run(), goal
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--deadline", type=float, default=3600.0)
@@ -61,9 +104,14 @@ def main():
 
     goal2 = Goal("min_time_budget", budget_usd=args.budget)
     sched, *_ = fresh_scheduler("hier")
-    res2 = sched.run(plans, goal2)
+    res2 = sched.run(plans, goal2, stop_at_budget=True)
     show(f"Scenario 2 — min time s.t. $ <= {args.budget:.0f} "
          f"({args.model})", res2, goal2)
+
+    res3, goal3 = run_workflow(args)
+    show_workflow(f"Scenario 3 — train -> fine-tune -> eval workflow under "
+                  f"one goal (T <= {goal3.deadline_s:.0f}s, "
+                  f"$ <= {goal3.budget_usd:.0f})", res3, goal3)
 
 
 if __name__ == "__main__":

@@ -61,10 +61,34 @@ class Goal:
       "min_time_budget"   — minimize time s.t. $ <= budget_usd            (Scenario 2)
       "min_time"          — as fast as possible
       "min_cost"          — as cheap as possible
+      "deadline_budget"   — minimize time s.t. time <= deadline_s AND
+                            $ <= budget_usd — the workflow-level goal one
+                            ``BudgetAllocator`` splits across a task DAG,
+                            and the per-task grant it hands each task
+
+    Constrained kinds validate their limit at construction: a
+    "min_cost_deadline" without a deadline (or "deadline_budget" missing
+    either limit) is a configuration bug, not a free-running goal.
     """
     kind: str
     deadline_s: Optional[float] = None
     budget_usd: Optional[float] = None
+
+    _REQUIRED = {"min_cost_deadline": ("deadline_s",),
+                 "min_time_budget": ("budget_usd",),
+                 "deadline_budget": ("deadline_s", "budget_usd"),
+                 "min_time": (), "min_cost": ()}
+
+    def __post_init__(self):
+        if self.kind not in self._REQUIRED:
+            raise ValueError(f"unknown goal kind: {self.kind!r}")
+        for field in self._REQUIRED[self.kind]:
+            limit = getattr(self, field)
+            if limit is None:
+                raise ValueError(f"goal kind {self.kind!r} requires {field}")
+            if limit <= 0:
+                raise ValueError(f"goal {field} must be positive, "
+                                 f"got {limit}")
 
     def objective_and_constraint(self, time_s: float, cost_usd: float,
                                  inflation: float = 1.0):
@@ -73,13 +97,21 @@ class Goal:
         ``inflation`` is the ssp-aware staleness penalty
         (``staleness_inflation``): the predicted epochs-to-converge scale
         by it, so both the time and the dollars a candidate config is
-        judged on grow with its staleness bound."""
+        judged on grow with its staleness bound.
+
+        "deadline_budget" carries two limits; its constraint is the
+        *binding* one, normalized — ``max(time/deadline, cost/budget)``
+        against a limit of 1.0 — so the constrained-EI machinery needs no
+        second constraint GP."""
         time_s = time_s * inflation
         cost_usd = cost_usd * inflation
         if self.kind == "min_cost_deadline":
             return cost_usd, time_s, self.deadline_s
         if self.kind == "min_time_budget":
             return time_s, cost_usd, self.budget_usd
+        if self.kind == "deadline_budget":
+            return time_s, max(time_s / self.deadline_s,
+                               cost_usd / self.budget_usd), 1.0
         if self.kind == "min_time":
             return time_s, None, None
         if self.kind == "min_cost":

@@ -6,12 +6,23 @@ configuration changes (batch size for dynamic batching, model size for NAS),
 re-runs the Bayesian optimizer when they change, redeploys workers at the
 new <n_workers, memory> configuration, enforces the function duration cap
 with checkpoint/restart, and restarts failed workers.
+
+Runs are *resumable*: ``run(max_epochs=...)`` executes a bounded slice and
+returns a ``RunResult`` whose ``.state`` continues the same run when passed
+back as ``resume=`` — totals, trace, and the adaptation RNG stream carry
+over, so a sliced run is equivalent to one uninterrupted call. The epoch
+loop itself is a generator (``drive``) that yields an ``EngineRequest``
+for every event-engine execution it needs: the default ``run`` wrapper
+builds and runs each engine standalone, while the workflow orchestrator
+(``repro.workflow``) builds them into a *shared* ``ContentionDomain`` at
+the task's workflow-clock offset, co-scheduling many TaskScheduler jobs on
+one simulated fleet.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional
+from typing import Callable, ClassVar, Dict, FrozenSet, List, Optional, Tuple
 
 import numpy as np
 
@@ -38,7 +49,7 @@ class EpochPlan:
 class TraceEvent:
     t: float
     epoch: int
-    kind: str                          # "epoch" | "profile" | "reoptimize"
+    kind: str                          # one of KINDS (validated below)
     throughput: float = 0.0            # samples / s
     workers: int = 0
     memory_mb: int = 0
@@ -47,6 +58,46 @@ class TraceEvent:
     cost_cum: float = 0.0
     restarts: int = 0                  # duration-cap restarts, per worker
     failures: int = 0
+
+    # every kind the scheduler emits; a new kind must be registered here
+    # before it can appear in a trace, so typos fail loudly instead of
+    # silently slipping past `events if e.kind == ...` filters
+    KINDS: ClassVar[FrozenSet[str]] = frozenset(
+        {"epoch", "profile", "reoptimize", "reoptimize_mid"})
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(f"unknown TraceEvent kind: {self.kind!r} "
+                             f"(register it in TraceEvent.KINDS)")
+
+
+@dataclasses.dataclass
+class SchedulerState:
+    """Resumable cursor of a (possibly partial) ``TaskScheduler.run``.
+
+    ``run(max_epochs=k)`` returns after k epoch plans with ``done=False``;
+    passing the state back via ``resume=`` continues where it left off.
+    ``stop_reason`` records why a finished run ended: "completed" (all
+    plans executed), "deadline", or "budget"."""
+    next_epoch: int = 0
+    config: Optional[Config] = None
+    last_sig: Optional[Tuple] = None
+    t: float = 0.0
+    cost: float = 0.0
+    t_prof: float = 0.0
+    usd_prof: float = 0.0
+    epochs_done: int = 0
+    events: List[TraceEvent] = dataclasses.field(default_factory=list)
+    history: List[Config] = dataclasses.field(default_factory=list)
+    rng_state: Optional[Tuple] = None
+    done: bool = False
+    stop_reason: str = ""              # "" | "completed" | "deadline" | "budget"
+    # observed actual/forecast ratios (event path): the stop gates forecast
+    # with epoch_estimate, which knows nothing of cross-job contention on a
+    # shared domain — each completed epoch teaches the gate how much slower
+    # and dearer this task actually runs than its isolated estimate
+    cost_infl: float = 1.0
+    time_infl: float = 1.0
 
 
 @dataclasses.dataclass
@@ -58,10 +109,29 @@ class RunResult:
     profile_usd: float
     epochs_done: int
     config_history: List[Config]
+    state: Optional[SchedulerState] = None
 
     @property
     def total_cost(self):
         return self.cost_usd + self.profile_usd
+
+    @property
+    def stop_reason(self) -> str:
+        return self.state.stop_reason if self.state is not None else ""
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    """One event-engine execution the epoch loop needs.
+
+    Yielded by ``TaskScheduler.drive``; the driver builds the engine —
+    optionally into a shared ``ContentionDomain`` via
+    ``build(domain=..., start_at=..., on_complete=...)`` — and sends the
+    ``EngineResult`` back into the generator. ``at_t`` is the task-local
+    clock (profiling + prior epochs) when the chunk starts, i.e. the
+    offset at which a workflow orchestrator should admit the engine."""
+    at_t: float
+    build: Callable[..., object]
 
 
 class TaskScheduler:
@@ -73,7 +143,8 @@ class TaskScheduler:
                  probe_cap_s: float = 180.0, bo_max_iters: int = 12,
                  engine: str = "analytic",
                  engine_opts: Optional[Dict] = None,
-                 mid_epoch_adapt: bool = True):
+                 mid_epoch_adapt: bool = True,
+                 job: str = ""):
         self.platform = platform
         self.object_store = object_store
         self.param_store = param_store
@@ -97,6 +168,9 @@ class TaskScheduler:
         self.engine = engine
         self.engine_opts = dict(engine_opts or {})
         self.mid_epoch_adapt = mid_epoch_adapt
+        # ledger attribution label: several workflow tasks billing one
+        # shared platform stay separable in ``ledger.job_usd``
+        self.job = job
 
     def _space_for(self, w: Workload) -> ConfigSpace:
         """Resource-manager floor: the function must hold model + grads +
@@ -137,6 +211,8 @@ class TaskScheduler:
             limit = goal.deadline_s
         elif goal.kind == "min_time_budget":
             limit = goal.budget_usd
+        elif goal.kind == "deadline_budget":
+            limit = 1.0                # normalized max(time, cost) constraint
         space = self._space_for(w)
         max_iters = self.bo_max_iters
         if warm_start is not None:
@@ -191,6 +267,11 @@ class TaskScheduler:
             obj, cons, _ = goal.objective_and_constraint(total_t, total_c,
                                                          inflation=infl)
             bo.observe(c, obj, cons)
+        if usd_prof > 0.0:
+            # profiling probes are real invocations: they belong on the
+            # shared bill, attributed to this job
+            self.platform.ledger.charge("profile", usd_prof)
+            self.platform.ledger.attribute(self.job, usd_prof)
         # probes run real training iterations (the paper profiles live
         # throughput) — those samples count toward the epoch
         useful = sum(1 for o in bo.obs) * self.profile_iters * batch
@@ -204,7 +285,11 @@ class TaskScheduler:
         """Execute one epoch on the discrete-event engine, in chunks: when
         the per-iteration ThroughputMonitor detects a sustained drift, the
         engine checkpoints and stops, we re-optimize *mid-epoch*, and the
-        remaining samples run under the new deployment."""
+        remaining samples run under the new deployment.
+
+        This is a generator: every engine execution is a yielded
+        ``EngineRequest`` whose ``EngineResult`` is sent back in, so a
+        workflow orchestrator can run the chunk on a shared domain."""
         # deferred: events consumes the CommPlan IR from repro.core, so a
         # top-level import here would close an import cycle
         from repro.serverless.events import EventEngine
@@ -235,18 +320,27 @@ class TaskScheduler:
             if config.small_frac > 0.0 and "fleet" not in opts:
                 opts["fleet"] = fleet_from_config(
                     config.workers, config.memory_mb, config.small_frac)
-            r = EventEngine(
-                plan.workload, self._comm_for(config), config.workers,
-                config.memory_mb,
-                plan.batch_size, self.param_store, self.object_store,
-                platform=self.platform,
-                framework_init_s=self.framework_init_s,
-                cold_start_s=self.cold_start_s,
-                max_duration_s=self.platform.max_duration_s,
-                samples=remaining, seed=self.seed + 7919 * epoch_i + attempt,
-                on_iteration=on_it, trace_enabled=False, **opts).run()
+            args = (plan.workload, self._comm_for(config), config.workers,
+                    config.memory_mb, plan.batch_size, self.param_store,
+                    self.object_store)
+            kwargs = dict(platform=self.platform,
+                          framework_init_s=self.framework_init_s,
+                          cold_start_s=self.cold_start_s,
+                          max_duration_s=self.platform.max_duration_s,
+                          samples=remaining,
+                          seed=self.seed + 7919 * epoch_i + attempt,
+                          on_iteration=on_it, trace_enabled=False, **opts)
+            r = yield EngineRequest(
+                at_t=t_base + wall + t_prof,
+                build=lambda args=args, kwargs=kwargs, **extra: EventEngine(
+                    *args, **{**kwargs, **extra}))
             wall += r.wall_s
             cost += r.cost_usd
+            # the engine's lambda dollars reached the shared ledger through
+            # platform.finish; the store-side dollars did not — put them on
+            # the bill too, and attribute the whole chunk to this job
+            self.platform.ledger.charge("store", r.store_usd)
+            self.platform.ledger.attribute(self.job, r.cost_usd)
             # EngineResult.restarts is fleet-wide; TraceEvent.restarts is
             # per worker (matching the analytic path's restarts_per_worker)
             restarts += round(r.restarts / config.workers)
@@ -277,18 +371,66 @@ class TaskScheduler:
     # -- main loop ------------------------------------------------------------
     def run(self, plans: List[EpochPlan], goal: Goal, *, adaptive: bool = True,
             fixed_config: Optional[Config] = None,
-            stop_at_deadline: bool = False) -> RunResult:
-        events: List[TraceEvent] = []
-        t = 0.0
-        cost = 0.0
-        t_prof = usd_prof = 0.0
-        config: Optional[Config] = fixed_config
-        last_sig = None
-        history: List[Config] = []
-        epochs_done = 0
-        rng = np.random.RandomState(self.seed)
+            stop_at_deadline: bool = False,
+            stop_at_budget: bool = False,
+            max_epochs: Optional[int] = None,
+            resume: Optional[SchedulerState] = None,
+            warm_start: Optional[Config] = None) -> RunResult:
+        """Execute the epoch plans under ``goal``.
 
-        for i, plan in enumerate(plans):
+        ``stop_at_deadline`` / ``stop_at_budget`` break before an epoch
+        that would push wall time past ``goal.deadline_s`` / total cost
+        past ``goal.budget_usd``. ``max_epochs`` bounds this call to a
+        slice; pass the returned ``RunResult.state`` back as ``resume=``
+        to continue. ``warm_start`` seeds the first optimization with a
+        config from another run (cross-task reuse)."""
+        gen = self.drive(plans, goal, adaptive=adaptive,
+                         fixed_config=fixed_config,
+                         stop_at_deadline=stop_at_deadline,
+                         stop_at_budget=stop_at_budget,
+                         max_epochs=max_epochs, resume=resume,
+                         warm_start=warm_start)
+        try:
+            req = next(gen)
+            while True:
+                req = gen.send(req.build().run())
+        except StopIteration as stop:
+            return stop.value
+
+    def drive(self, plans: List[EpochPlan], goal: Goal, *,
+              adaptive: bool = True, fixed_config: Optional[Config] = None,
+              stop_at_deadline: bool = False, stop_at_budget: bool = False,
+              max_epochs: Optional[int] = None,
+              resume: Optional[SchedulerState] = None,
+              warm_start: Optional[Config] = None):
+        """Generator form of ``run``: yields an ``EngineRequest`` for
+        every event-engine execution, expects its ``EngineResult`` sent
+        back, and returns the ``RunResult`` via ``StopIteration.value``.
+        The workflow orchestrator drives many of these concurrently on
+        one shared ``ContentionDomain``."""
+        st = resume if resume is not None else SchedulerState(
+            config=fixed_config)
+        if st.done:
+            raise ValueError("cannot resume a finished run "
+                             f"(stop_reason={st.stop_reason!r})")
+        events, history = st.events, st.history
+        config = st.config
+        last_sig = st.last_sig
+        t, cost = st.t, st.cost
+        t_prof, usd_prof = st.t_prof, st.usd_prof
+        epochs_done = st.epochs_done
+        rng = np.random.RandomState(self.seed)
+        if st.rng_state is not None:
+            rng.set_state(st.rng_state)
+        executed = 0
+        i = st.next_epoch
+        paused = False
+
+        while i < len(plans):
+            if max_epochs is not None and executed >= max_epochs:
+                paused = True
+                break
+            plan = plans[i]
             sig = (plan.batch_size, plan.workload.param_count,
                    plan.workload.flops_per_sample)
             profiled_samples = 0
@@ -296,7 +438,7 @@ class TaskScheduler:
                 config, pt, pu, profiled_samples = self.optimize(
                     plan.workload, plan.batch_size, goal,
                     epochs_remaining=len(plans) - i, samples=plan.samples,
-                    warm_start=config)
+                    warm_start=config if config is not None else warm_start)
                 t += pt
                 cost += pu
                 t_prof += pt
@@ -308,28 +450,62 @@ class TaskScheduler:
                                          model_params=plan.workload.param_count,
                                          cost_cum=cost))
             last_sig = sig
-            history.append(config)
 
             samples_plan = plan.samples or plan.workload.dataset_samples
             samples_left = max(samples_plan - profiled_samples,
                                plan.batch_size)
+
+            # forecast gate: never *start* an epoch whose estimate busts
+            # the budget (both paths) or — on the event path, where the
+            # epoch's ledger/store/shared-clock side effects are
+            # irreversible once it runs — the deadline
+            est_pre = None
+            if ((stop_at_budget and goal.budget_usd is not None)
+                    or (self.engine == "event" and stop_at_deadline
+                        and goal.deadline_s is not None)):
+                est_pre = epoch_estimate(
+                    plan.workload, self._comm_for(config), config,
+                    plan.batch_size, self.param_store, self.object_store,
+                    framework_init_s=self.framework_init_s,
+                    cold_start_s=self.cold_start_s, samples=samples_left)
+            if (stop_at_budget and goal.budget_usd is not None
+                    and cost + est_pre.cost_usd * st.cost_infl
+                    > goal.budget_usd):
+                st.stop_reason = "budget"
+                break
+            if (self.engine == "event" and stop_at_deadline
+                    and goal.deadline_s is not None
+                    and t + est_pre.wall_s * st.time_infl > goal.deadline_s):
+                st.stop_reason = "deadline"
+                break
+
+            history.append(config)
 
             if self.engine == "event":
                 # the epoch actually executed (stores + ledger already
                 # carry its side effects); a later deadline break only
                 # drops it from the result totals
                 wall, epoch_cost, restarts, failures, config, meta = \
-                    self._run_epoch_event(plan, goal, config, samples_left,
-                                          i, len(plans), adaptive, events,
-                                          t, cost)
+                    yield from self._run_epoch_event(
+                        plan, goal, config, samples_left, i, len(plans),
+                        adaptive, events, t, cost)
                 t_prof += meta["t_prof"]
                 usd_prof += meta["usd_prof"]
                 t += meta["t_prof"]
                 cost += meta["usd_prof"]
                 history.extend(meta["configs"])
                 commit = None
+                if est_pre is not None:
+                    # calibrate the stop gates on what this epoch really
+                    # cost vs its isolated forecast (shared-domain
+                    # contention, stragglers, failures)
+                    if est_pre.cost_usd > 0:
+                        st.cost_infl = max(1.0, epoch_cost
+                                           / est_pre.cost_usd)
+                    if est_pre.wall_s > 0:
+                        st.time_infl = max(1.0, wall / est_pre.wall_s)
             else:
-                est = epoch_estimate(
+                est = est_pre if est_pre is not None else epoch_estimate(
                     plan.workload, self._comm_for(config), config,
                     plan.batch_size, self.param_store, self.object_store,
                     framework_init_s=self.framework_init_s,
@@ -342,7 +518,8 @@ class TaskScheduler:
                 epoch_cost = est.cost_usd * (wall / est.wall_s)
                 restarts = est.restarts_per_worker
 
-                def commit(est=est, wall=wall, config=config):
+                def commit(est=est, wall=wall, config=config,
+                           epoch_cost=epoch_cost):
                     # per-phase store-busy time from the plan (re-upload
                     # fan-in included, decompress CPU excluded) — the
                     # same basis epoch_estimate bills store_usd on
@@ -353,22 +530,60 @@ class TaskScheduler:
                     self.platform.ledger.charge_fleet(
                         config.memory_mb, config.workers, wall,
                         invocations_per_worker=est.restarts_per_worker + 1)
+                    scale = wall / est.wall_s
+                    self.platform.ledger.charge("store",
+                                                est.store_usd * scale)
+                    self.platform.ledger.attribute(self.job, epoch_cost)
 
             if (stop_at_deadline and goal.deadline_s is not None
                     and t + wall > goal.deadline_s):
+                st.stop_reason = "deadline"
+                if commit is None:
+                    # event-path epochs bill as they run: the overshooting
+                    # epoch's dollars are already on the shared ledger, so
+                    # they stay in this run's cost even though its samples
+                    # are discarded from the result — a budget layer above
+                    # (the workflow allocator) must see money that is gone
+                    cost += epoch_cost
+                break
+            if (commit is not None and stop_at_budget
+                    and goal.budget_usd is not None
+                    and cost + epoch_cost > goal.budget_usd):
+                # the symmetric budget stop: break *before* committing the
+                # epoch, so a min_time_budget goal never overspends (the
+                # event path gates on the forecast above instead — its
+                # epochs bill as they run)
+                st.stop_reason = "budget"
                 break
             if commit is not None:
                 commit()      # deadline-skipped epochs are never billed
             t += wall
             cost += epoch_cost
             epochs_done += 1
+            executed += 1
             events.append(TraceEvent(
                 t, i, "epoch", throughput=samples_left / wall,
                 workers=config.workers, memory_mb=config.memory_mb,
                 batch_size=plan.batch_size,
                 model_params=plan.workload.param_count, cost_cum=cost,
                 restarts=restarts, failures=failures))
+            i += 1
 
-        return RunResult(events=events, wall_s=t, cost_usd=cost - usd_prof,
+        st.next_epoch = i
+        st.config = config
+        st.last_sig = last_sig
+        st.t, st.cost = t, cost
+        st.t_prof, st.usd_prof = t_prof, usd_prof
+        st.epochs_done = epochs_done
+        st.rng_state = rng.get_state()
+        if not paused and not st.stop_reason:
+            st.stop_reason = "completed"
+        st.done = not paused
+        # snapshot the live lists: a later resumed slice keeps appending
+        # to st.events/st.history, and must not retroactively mutate the
+        # RunResult this slice returned
+        return RunResult(events=list(events), wall_s=t,
+                         cost_usd=cost - usd_prof,
                          profile_s=t_prof, profile_usd=usd_prof,
-                         epochs_done=epochs_done, config_history=history)
+                         epochs_done=epochs_done,
+                         config_history=list(history), state=st)

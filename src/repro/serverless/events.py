@@ -147,7 +147,8 @@ class ContentionDomain:
         self._seq = itertools.count()
         self._links: Dict[Tuple[int, str], SharedLink] = {}
         self._engines: List["EventEngine"] = []
-        self._ran = False
+        self._groups: Dict[int, List["EventEngine"]] = {}
+        self._running = False
         # union of time *any* engine's sync transfers are outstanding: the
         # honest keep-alive window for one param store shared across jobs
         # (per-engine sync_s sums would double-bill the overlap)
@@ -155,6 +156,10 @@ class ContentionDomain:
         # same union, kept per param store (id) — the billing basis when a
         # store is shared: each engine is billed its proportional share
         self._store_sync: Dict[int, float] = {}
+        # union seconds already allocated to taken results, per store —
+        # lets late-arriving engines (workflow tasks admitted at t > 0)
+        # bill against only the not-yet-allocated remainder
+        self._store_billed: Dict[int, float] = {}
 
     def at(self, t: float, fn: Callable):
         heapq.heappush(self._q, (t, next(self._seq), fn))
@@ -168,36 +173,56 @@ class ContentionDomain:
         return self._links[key]
 
     def _register(self, engine: "EventEngine"):
-        if self._ran:
-            raise RuntimeError("cannot register an engine after run()")
+        """Admit an engine. Admission is legal at any point — before the
+        first ``run()``, between runs, or *mid-run* (a workflow task whose
+        dependencies completed at t > 0): a mid-run admission schedules the
+        engine's start at ``max(start_at, now)`` on the live queue."""
         self._engines.append(engine)
+        self._groups.setdefault(id(engine.param_store), []).append(engine)
+        if self._running:
+            # the engine is still mid-__init__ when it registers: defer the
+            # launch onto the live queue so it starts (at its own start_at,
+            # never in the past) only once fully constructed
+            self.at(max(engine.start_at, self.now),
+                    lambda: self._launch(engine))
         return len(self._engines) - 1   # job index
 
+    def _launch(self, eng: "EventEngine"):
+        if eng._started:
+            return
+        if eng.start_at <= self.now:
+            eng._start()                 # the clock never rewinds
+        else:
+            self.at(eng.start_at, eng._start)
+
     def run(self):
-        """Run every registered engine to completion on the shared clock."""
-        self._ran = True
-        groups: Dict[int, List["EventEngine"]] = {}
-        for eng in self._engines:
-            eng._start()
-            groups.setdefault(id(eng.param_store), []).append(eng)
-        links = list(self._links.values())
-        while self._q:
-            t, _, fn = heapq.heappop(self._q)
-            if t > self.now:
-                dt = t - self.now
-                if any(e._sync_active > 0 for e in self._engines):
-                    self.sync_union_s += dt
-                for sid, engs in groups.items():
-                    if any(e._sync_active > 0 for e in engs):
-                        self._store_sync[sid] = (
-                            self._store_sync.get(sid, 0.0) + dt)
-                for eng in self._engines:
-                    if eng._sync_active > 0:
-                        eng._sync_busy += dt
-                for link in links:
-                    link.progress(t)
-                self.now = t
-            fn()
+        """Run every registered engine to completion on the shared clock.
+        May be called again after more engines are admitted: the clock is
+        monotonic across calls, and engines with ``start_at`` in the
+        future begin exactly then."""
+        self._running = True
+        try:
+            for eng in list(self._engines):
+                self._launch(eng)
+            while self._q:
+                t, _, fn = heapq.heappop(self._q)
+                if t > self.now:
+                    dt = t - self.now
+                    if any(e._sync_active > 0 for e in self._engines):
+                        self.sync_union_s += dt
+                    for sid, engs in self._groups.items():
+                        if any(e._sync_active > 0 for e in engs):
+                            self._store_sync[sid] = (
+                                self._store_sync.get(sid, 0.0) + dt)
+                    for eng in self._engines:
+                        if eng._sync_active > 0:
+                            eng._sync_busy += dt
+                    for link in self._links.values():
+                        link.progress(t)
+                    self.now = t
+                fn()
+        finally:
+            self._running = False
         for eng in self._engines:
             eng._check_complete()
 
@@ -205,15 +230,26 @@ class ContentionDomain:
         """One engine's billing share of its param store's keep-alive
         window: the per-store *union* (the container is alive once, not
         once per job) split across the sharing jobs in proportion to
-        their own sync windows. With a single job this is exactly the
-        engine's own ``sync_s``."""
-        peers = [e for e in self._engines
-                 if e.param_store is engine.param_store]
-        total = sum(e._sync_busy for e in peers)
+        their own sync windows — so the per-store billed total always
+        equals the union, never double-billing overlap.
+
+        Shares are allocated in result-taking order: each engine takes
+        its sync-proportional slice of the union seconds not yet
+        allocated to an earlier result. For engines whose results are all
+        taken after one ``run()`` this reproduces the plain proportional
+        split exactly; for a workflow, where engines join and settle at
+        different times, it keeps the running total honest."""
+        sid = id(engine.param_store)
+        unbilled = [e for e in self._groups.get(sid, [engine])
+                    if e._result is None]
+        total = sum(e._sync_busy for e in unbilled)
         if total <= 0.0:
             return 0.0
-        union = self._store_sync.get(id(engine.param_store), 0.0)
-        return union * (engine._sync_busy / total)
+        pool = (self._store_sync.get(sid, 0.0)
+                - self._store_billed.get(sid, 0.0))
+        share = max(pool, 0.0) * (engine._sync_busy / total)
+        self._store_billed[sid] = self._store_billed.get(sid, 0.0) + share
+        return share
 
 
 @dataclasses.dataclass
@@ -407,7 +443,9 @@ class EventEngine:
                  slowdown_at_iter: Optional[int] = None,
                  slowdown_factor: float = 1.0,
                  on_iteration: Optional[Callable] = None,
-                 trace_enabled: bool = True):
+                 trace_enabled: bool = True,
+                 start_at: float = 0.0,
+                 on_complete: Optional[Callable] = None):
         self.w = workload
         self.scheme = scheme
         if fleet is None:
@@ -442,6 +480,15 @@ class EventEngine:
         self.slowdown_factor = slowdown_factor
         self.on_iteration = on_iteration
         self.trace_enabled = trace_enabled
+        # admission offset on a shared domain clock: a workflow task whose
+        # dependencies finish at t > 0 starts exactly then. wall_s stays
+        # relative to the engine's own start (``_t0``); iter_times remain
+        # absolute domain timestamps.
+        self.start_at = max(start_at, 0.0)
+        # called (with the engine) the instant every worker has finished —
+        # the orchestrator's hook to resume the owning task mid-drain
+        self.on_complete = on_complete
+        self._t0 = 0.0
 
         if fleet.is_homogeneous:
             local_batch = max(global_batch // self.n, 1)
@@ -518,6 +565,12 @@ class EventEngine:
     def _tr(self, w: _WorkerState, what: str):
         if self.trace_enabled:
             self._trace.append(f"{self.now:.6f} w{w.wid} {what}")
+
+    def _ckpt_key(self, w: _WorkerState) -> str:
+        """Checkpoint blob key, namespaced by the engine's job index so
+        concurrent workflow tasks sharing one ObjectStore never clobber
+        each other's restart state (a private domain is always j0)."""
+        return f"ckpt/j{self._job_idx}/w{w.wid}"
 
     def _reschedule(self, link: SharedLink):
         """Flow set changed: invalidate outstanding completion predictions
@@ -703,7 +756,7 @@ class EventEngine:
         self._pause_activity(w)
         self._close_invocation(w)
         # checkpoint out through the object store, restore on re-invoke
-        self.object_store.put(f"ckpt/w{w.wid}", {"iter": w.it},
+        self.object_store.put(self._ckpt_key(w), {"iter": w.it},
                               nbytes=self.ckpt_bytes)
         self._restart(w)
 
@@ -715,7 +768,7 @@ class EventEngine:
         self._close_invocation(w)
         # the dead function checkpointed nothing; the restart restores the
         # last iteration-boundary state (kept in the object store)
-        self.object_store.put(f"ckpt/w{w.wid}", {"iter": w.it},
+        self.object_store.put(self._ckpt_key(w), {"iter": w.it},
                               nbytes=self.ckpt_bytes)
         w.pending = retry
         self._restart(w)
@@ -724,8 +777,8 @@ class EventEngine:
         w.restarting = True
 
         def resume():
-            if f"ckpt/w{w.wid}" in self.object_store.blobs:
-                self.object_store.get(f"ckpt/w{w.wid}", nbytes=self.ckpt_bytes)
+            if self._ckpt_key(w) in self.object_store.blobs:
+                self.object_store.get(self._ckpt_key(w), nbytes=self.ckpt_bytes)
             w.restarting = False
             pending, w.pending = w.pending, None
             if callable(pending):
@@ -788,7 +841,7 @@ class EventEngine:
             tr.latency_left = tr.setup_latency_s
             w.pending = lambda: self._resume_transfer(w, tr)
         self._close_invocation(w)
-        self.object_store.put(f"ckpt/w{w.wid}", {"iter": w.it},
+        self.object_store.put(self._ckpt_key(w), {"iter": w.it},
                               nbytes=self.ckpt_bytes)
         self._restart(w)
         return True
@@ -961,18 +1014,21 @@ class EventEngine:
             return
         w.finished = True
         if self._stopping:
-            self.object_store.put(f"ckpt/w{w.wid}", {"iter": w.it},
+            self.object_store.put(self._ckpt_key(w), {"iter": w.it},
                                   nbytes=self.ckpt_bytes)
         self._close_invocation(w)
         self._tr(w, "finish")
         if all(ww.finished for ww in self._workers):
             self._wall = self.now    # stale timer events may pop later
+            if self.on_complete is not None:
+                self.on_complete(self)
 
     # -- run -----------------------------------------------------------------
     def _start(self):
         if self._started:
             return
         self._started = True
+        self._t0 = self.now
         for w in self._workers:
             self._start_worker(w)
         if self.shocks is not None:
@@ -1010,7 +1066,8 @@ class EventEngine:
         store_usd = (billed_s / 3600.0 * store_hourly
                      + n_objects * S3_GET_PER_1K / 1000.0 * self.n)
         self._result = EngineResult(
-            wall_s=self._wall, lambda_usd=lambda_usd, store_usd=store_usd,
+            wall_s=max(self._wall - self._t0, 0.0),
+            lambda_usd=lambda_usd, store_usd=store_usd,
             iters_done=self._g_done,
             samples_done=min(self._g_done * self.global_batch, self.samples),
             sync_s=sync_s, store_billed_s=billed_s,

@@ -153,6 +153,13 @@ class BillingLedger:
     gb_seconds: float = 0.0
     requests: int = 0
     extra: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # per-task cost attribution: when several workflow tasks bill one
+    # shared platform, ``job_usd`` breaks the one bill down by job label
+    # (a bookkeeping view — never added into ``total_cost``)
+    job_usd: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def attribute(self, job: str, dollars: float):
+        self.job_usd[job] = self.job_usd.get(job, 0.0) + dollars
 
     def charge_fn(self, memory_mb: float, duration_s: float):
         self.gb_seconds += memory_mb / 1024.0 * duration_s

@@ -1,0 +1,20 @@
+"""Workflow layer: DAGs of ML tasks (HPO / NAS / fine-tune / eval) under
+one global deadline + budget on a shared serverless fleet.
+
+ - dag:          ``TaskSpec`` / ``WorkflowDAG`` — the typed task graph
+ - allocator:    ``BudgetAllocator`` — splits one ``Goal`` into per-task
+                 grants, deadlines, and worker windows; re-allocates on
+                 every completion
+ - tuner:        ``HPOSweep`` / ``SuccessiveHalving`` — rung-structured
+                 successive-halving HPO with warm-started rungs
+ - orchestrator: ``WorkflowOrchestrator`` — co-schedules ready tasks as
+                 concurrent ``TaskScheduler`` jobs on one shared
+                 ``ContentionDomain``
+"""
+from repro.workflow.allocator import (  # noqa: F401
+    BudgetAllocator, TaskAllocation, TaskForecast)
+from repro.workflow.dag import TaskSpec, WorkflowDAG  # noqa: F401
+from repro.workflow.orchestrator import (  # noqa: F401
+    WorkflowOrchestrator, WorkflowResult)
+from repro.workflow.tuner import (  # noqa: F401
+    HPOSweep, SuccessiveHalving, expand_hpo, sweep_final_tasks, trial_loss)

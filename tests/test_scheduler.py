@@ -242,3 +242,118 @@ def test_scheduler_deploys_searched_fleet_on_event_engine():
     homog_gb = sum(4096 / 1024.0 * (rec.end - rec.start)
                    for rec in plat.invocations)
     assert plat.ledger.gb_seconds < 0.95 * homog_gb
+
+
+# -- goals, budget stops, trace-kind validation, resumable runs --------------
+
+def test_goal_validation_edge_cases():
+    """Unknown kinds and missing/non-positive limits on constrained kinds
+    fail at construction, not deep inside a run."""
+    with pytest.raises(ValueError, match="unknown goal kind"):
+        Goal("warp_speed")
+    with pytest.raises(ValueError, match="requires deadline_s"):
+        Goal("min_cost_deadline")
+    with pytest.raises(ValueError, match="requires budget_usd"):
+        Goal("min_time_budget")
+    with pytest.raises(ValueError, match="requires"):
+        Goal("deadline_budget", deadline_s=10.0)
+    with pytest.raises(ValueError, match="positive"):
+        Goal("min_time_budget", budget_usd=0.0)
+    Goal("min_time")                      # unconstrained kinds need nothing
+
+
+def test_goal_inflation_scales_time_and_cost():
+    g = Goal("min_time_budget", budget_usd=10.0)
+    obj, cons, limit = g.objective_and_constraint(100.0, 4.0, inflation=1.5)
+    assert obj == pytest.approx(150.0)    # time objective inflates
+    assert cons == pytest.approx(6.0)     # and so does the cost constraint
+    assert limit == 10.0
+    # the workflow kind: normalized binding constraint against 1.0
+    gw = Goal("deadline_budget", deadline_s=200.0, budget_usd=5.0)
+    obj, cons, limit = gw.objective_and_constraint(100.0, 4.0)
+    assert obj == 100.0 and limit == 1.0
+    assert cons == pytest.approx(max(100.0 / 200.0, 4.0 / 5.0))
+
+
+def test_run_result_total_cost_accounting():
+    from repro.core import RunResult
+    res = RunResult(events=[], wall_s=10.0, cost_usd=3.0, profile_s=2.0,
+                    profile_usd=0.5, epochs_done=1, config_history=[])
+    assert res.total_cost == pytest.approx(3.5)
+    assert res.stop_reason == ""          # no state attached
+
+
+def test_trace_event_kind_validated():
+    from repro.core import TraceEvent
+    for kind in sorted(TraceEvent.KINDS):
+        TraceEvent(0.0, 0, kind)          # every registered kind is legal
+    assert "reoptimize_mid" in TraceEvent.KINDS
+    with pytest.raises(ValueError, match="reoptimize_mdi"):
+        TraceEvent(0.0, 0, "reoptimize_mdi")
+
+
+def test_budget_stop_never_overspends():
+    """Satellite regression: the symmetric budget stop breaks before the
+    epoch that would push total cost past goal.budget_usd."""
+    cfg = Config(workers=16, memory_mb=3072)
+    est = epoch_estimate(W, "hier", cfg, 1024, ParamStore(), ObjectStore(),
+                         samples=50_000)
+    budget = est.cost_usd * 2.5           # room for 2 of the 5 epochs
+    goal = Goal("min_time_budget", budget_usd=budget)
+    sched, _ = make_sched()
+    res = sched.run(plans([1024] * 5), goal, adaptive=False,
+                    fixed_config=cfg, stop_at_budget=True)
+    assert res.epochs_done == 2
+    assert res.total_cost <= budget
+    assert res.stop_reason == "budget"
+    # without the stop, the same run overspends — the regression guard
+    sched2, _ = make_sched()
+    res2 = sched2.run(plans([1024] * 5), goal, adaptive=False,
+                      fixed_config=cfg)
+    assert res2.total_cost > budget
+
+
+def test_budget_stop_on_event_engine_gates_ledger():
+    """Event-path epochs bill as they run, so the budget stop gates on
+    the forecast *before* launching — the shared ledger never exceeds
+    the budget either."""
+    cfg = Config(workers=8, memory_mb=2048)
+    est = epoch_estimate(W, "hier", cfg, 1024, ParamStore(), ObjectStore(),
+                         samples=20_000)
+    budget = est.cost_usd * 1.5
+    plat = ServerlessPlatform(seed=0)
+    sched = TaskScheduler(plat, ObjectStore(), ParamStore(), seed=0,
+                          engine="event")
+    res = sched.run(plans([1024] * 3, samples=20_000),
+                    Goal("min_time_budget", budget_usd=budget),
+                    adaptive=False, fixed_config=cfg, stop_at_budget=True)
+    assert res.epochs_done == 1
+    assert res.stop_reason == "budget"
+    assert plat.ledger.total_cost <= budget
+
+
+def test_sliced_run_resumes_to_identical_result():
+    """run(max_epochs=1) slices resumed back-to-back must reproduce the
+    uninterrupted run bit for bit: totals, trace, config history, and the
+    failure-injection RNG stream all carry through SchedulerState."""
+    batches = [512, 512, 2048]
+    g = Goal("min_time")
+    sched_full, _ = make_sched(failure_rate=0.05, seed=4)
+    full = sched_full.run(plans(batches), g)
+
+    sched_sliced, _ = make_sched(failure_rate=0.05, seed=4)
+    res = sched_sliced.run(plans(batches), g, max_epochs=1)
+    assert not res.state.done
+    while not res.state.done:
+        res = sched_sliced.run(plans(batches), g, max_epochs=1,
+                               resume=res.state)
+    assert res.epochs_done == full.epochs_done == 3
+    assert res.wall_s == pytest.approx(full.wall_s, rel=1e-12)
+    assert res.cost_usd == pytest.approx(full.cost_usd, rel=1e-12)
+    assert [e.kind for e in res.events] == [e.kind for e in full.events]
+    assert [(e.t, e.cost_cum) for e in res.events] == \
+        [(e.t, e.cost_cum) for e in full.events]
+    assert res.config_history == full.config_history
+    assert res.stop_reason == full.stop_reason == "completed"
+    with pytest.raises(ValueError, match="finished"):
+        sched_sliced.run(plans(batches), g, resume=res.state)

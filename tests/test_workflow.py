@@ -1,0 +1,315 @@
+"""Workflow layer: task DAGs, budget/deadline allocation, successive-halving
+HPO, and the orchestrator that co-schedules tasks on one shared fleet
+(paper Sections 1 and 3.1 — the "overarching view" over a continuous
+workflow of design and training tasks)."""
+import pytest
+
+from repro.core import Config, ConfigSpace, Goal
+from repro.serverless import (WORKLOADS, ObjectStore, ParamStore,
+                              ServerlessPlatform)
+from repro.workflow import (BudgetAllocator, HPOSweep, SuccessiveHalving,
+                            TaskSpec, WorkflowDAG, WorkflowOrchestrator,
+                            expand_hpo, sweep_final_tasks)
+
+W = WORKLOADS["resnet18"]
+
+
+def chain_dag(epochs=(2, 1, 1), samples=(4096, 2048, 1024)):
+    return WorkflowDAG([
+        TaskSpec("train", W, epochs=epochs[0], batch_size=512,
+                 samples=samples[0]),
+        TaskSpec("finetune", W, epochs=epochs[1], batch_size=512,
+                 samples=samples[1], deps=("train",), kind="finetune",
+                 warm_start_from="train"),
+        TaskSpec("eval", W, epochs=epochs[2], batch_size=512,
+                 samples=samples[2], deps=("finetune",), kind="eval"),
+    ])
+
+
+def orchestrate(dag, goal, *, engine="analytic", sweeps=(), seed=0,
+                max_workers=32, max_memory=4096):
+    plat = ServerlessPlatform(seed=seed)
+    orch = WorkflowOrchestrator(
+        dag, goal, plat, ObjectStore(), ParamStore(),
+        space=ConfigSpace(max_workers=max_workers, max_memory=max_memory),
+        engine=engine, sweeps=sweeps, seed=seed)
+    return orch, orch.run()
+
+
+# -- DAG ---------------------------------------------------------------------
+
+def test_dag_validation():
+    with pytest.raises(ValueError, match="duplicate"):
+        WorkflowDAG([TaskSpec("a", W), TaskSpec("a", W)])
+    with pytest.raises(ValueError, match="unknown dependency"):
+        WorkflowDAG([TaskSpec("a", W, deps=("ghost",))])
+    with pytest.raises(ValueError, match="itself"):
+        TaskSpec("a", W, deps=("a",))
+    with pytest.raises(ValueError, match="cycle"):
+        WorkflowDAG([TaskSpec("a", W, deps=("b",)),
+                     TaskSpec("b", W, deps=("a",))])
+    with pytest.raises(ValueError, match="kind"):
+        TaskSpec("a", W, kind="banana")
+
+
+def test_dag_order_ready_descendants():
+    dag = WorkflowDAG([
+        TaskSpec("c", W, deps=("a", "b")),
+        TaskSpec("a", W),
+        TaskSpec("b", W, deps=("a",)),
+        TaskSpec("d", W, deps=("c",)),
+    ])
+    assert dag.order == ["a", "b", "c", "d"]
+    assert [t.name for t in dag.ready(done=set())] == ["a"]
+    assert [t.name for t in dag.ready(done={"a"})] == ["b"]
+    assert [t.name for t in dag.ready(done={"a", "b"})] == ["c"]
+    assert dag.descendants("a") == {"b", "c", "d"}
+    assert dag.descendants("d") == set()
+
+
+def test_dag_tails_and_critical_path():
+    dag = WorkflowDAG([
+        TaskSpec("root", W),
+        TaskSpec("long", W, deps=("root",)),
+        TaskSpec("short", W, deps=("root",)),
+        TaskSpec("sink", W, deps=("long", "short")),
+    ])
+    walls = {"root": 10.0, "long": 100.0, "short": 5.0, "sink": 20.0}
+    tails = dag.tails(walls)
+    assert tails["sink"] == 0.0
+    assert tails["long"] == 20.0
+    assert tails["root"] == pytest.approx(120.0)
+    length, path = dag.critical_path(walls)
+    assert length == pytest.approx(130.0)
+    assert path == ["root", "long", "sink"]
+
+
+# -- allocator ---------------------------------------------------------------
+
+def test_allocator_grants_priorities_and_windows():
+    dag = WorkflowDAG([
+        TaskSpec("hi", W, epochs=1, batch_size=512, samples=8192, priority=4),
+        TaskSpec("lo", W, epochs=1, batch_size=512, samples=8192, priority=1),
+    ])
+    goal = Goal("deadline_budget", deadline_s=3600.0, budget_usd=4.0)
+    alloc = BudgetAllocator(dag, goal, ParamStore(), ObjectStore(),
+                            space=ConfigSpace(max_workers=32))
+    grants, drops = alloc.allocate(now_s=0.0, spent_usd=0.0, running={},
+                                   finished=set(), dropped=set(),
+                                   ready=["hi", "lo"])
+    assert not drops
+    # identical forecasts: the split is pure priority (4:1), up to the
+    # critical-path boost landing on one of the two equal chains
+    assert grants["hi"].budget_usd > grants["lo"].budget_usd
+    total = sum(g.budget_usd for g in grants.values())
+    assert total <= goal.budget_usd * alloc.safety + 1e-9
+    # every grant respects the global deadline
+    assert all(g.deadline_s <= goal.deadline_s for g in grants.values())
+    # dollars -> workers: a bigger grant never narrows the window
+    lo_w = alloc.workers_for_budget("hi", grants["lo"].budget_usd)
+    hi_w = alloc.workers_for_budget("hi", grants["hi"].budget_usd)
+    assert hi_w[1] >= lo_w[1]
+    assert hi_w[0] >= lo_w[0] >= 1
+
+
+def test_allocator_reallocates_unspent_budget():
+    """Unspent grants flow back: with one task finished *under* its
+    grant, the follower's grant exceeds what it would have been had the
+    full grant been spent."""
+    dag = WorkflowDAG([
+        TaskSpec("first", W, epochs=1, batch_size=512, samples=8192),
+        TaskSpec("second", W, epochs=1, batch_size=512, samples=8192,
+                 deps=("first",)),
+    ])
+    goal = Goal("deadline_budget", deadline_s=3600.0, budget_usd=2.0)
+    alloc = BudgetAllocator(dag, goal, ParamStore(), ObjectStore(),
+                            space=ConfigSpace(max_workers=32))
+    g0, _ = alloc.allocate(now_s=0.0, spent_usd=0.0, running={},
+                           finished=set(), dropped=set(), ready=["first"])
+    cheap, _ = alloc.allocate(now_s=100.0, spent_usd=0.1 * g0["first"].budget_usd,
+                              running={}, finished={"first"},
+                              dropped=set(), ready=["second"])
+    dear, _ = alloc.allocate(now_s=100.0, spent_usd=g0["first"].budget_usd,
+                             running={}, finished={"first"},
+                             dropped=set(), ready=["second"])
+    assert cheap["second"].budget_usd > dear["second"].budget_usd
+
+
+def test_allocator_drops_by_priority_under_deadline_pressure():
+    dag = WorkflowDAG([
+        TaskSpec("must", W, epochs=1, batch_size=512, samples=8192,
+                 priority=5),
+        TaskSpec("nice", W, epochs=1, batch_size=512, samples=8192,
+                 priority=1, droppable=True, deps=("must",)),
+        TaskSpec("nice-child", W, epochs=1, batch_size=512, samples=8192,
+                 deps=("nice",), droppable=True, priority=3),
+    ])
+    goal = Goal("deadline_budget", deadline_s=3600.0, budget_usd=4.0)
+    alloc = BudgetAllocator(dag, goal, ParamStore(), ObjectStore(),
+                            space=ConfigSpace(max_workers=32))
+    # pretend most of the deadline is gone: only the must-task's chain fits
+    chain = alloc.forecasts["must"].wall_s + alloc.forecasts["nice"].wall_s
+    grants, drops = alloc.allocate(
+        now_s=goal.deadline_s - chain * 1.01, spent_usd=0.0, running={},
+        finished=set(), dropped=set(), ready=["must"])
+    # the lowest-priority droppable goes first, dragging its dependent
+    assert "nice" in drops and "nice-child" in drops
+    assert "must" in grants
+
+
+# -- tuner -------------------------------------------------------------------
+
+def test_expand_hpo_shape_and_deps():
+    sweep = HPOSweep("hpo", W, n_trials=8, rungs=2, eta=2, seed=1)
+    specs = expand_hpo(sweep)
+    names = [s.name for s in specs]
+    assert len([n for n in names if ":r0:" in n]) == 8
+    assert len([n for n in names if ":r1:" in n]) == 4
+    r0 = tuple(n for n in names if ":r0:" in n)
+    for s in specs:
+        if s.rung == 1:
+            assert s.deps == r0           # selection barrier
+        else:
+            assert s.deps == ()
+    assert sweep_final_tasks(sweep) == tuple(n for n in names if ":r1:" in n)
+    with pytest.raises(ValueError):
+        HPOSweep("bad", W, n_trials=2, rungs=3, eta=2)
+
+
+def test_successive_halving_selection_and_warm_start():
+    sweep = HPOSweep("hpo", W, n_trials=4, rungs=2, eta=2, seed=7)
+    tuner = SuccessiveHalving(sweep)
+    specs = {s.name: s for s in expand_hpo(sweep)}
+    cfgs = {}
+    for i in range(4):
+        spec = specs[f"hpo:r0:t{i}"]
+        assert tuner.assign(spec) == i
+        cfgs[i] = Config(workers=4 + i, memory_mb=1024)
+        tuner.report(spec, epochs_done=1, config=cfgs[i])
+    ranked = tuner.survivors_of(0)
+    assert len(ranked) == 4
+    assert tuner.scores[ranked[0]] <= tuner.scores[ranked[-1]]
+    s0 = specs["hpo:r1:s0"]
+    assert tuner.assign(s0) == ranked[0]          # best trial takes slot 0
+    assert tuner.warm_config(s0) == cfgs[ranked[0]]
+    # more epochs always improves the synthetic curve
+    for trial in range(4):
+        assert tuner.loss(trial, 2) < tuner.loss(trial, 1)
+    best, loss = tuner.best()
+    assert best == ranked[0] and loss == tuner.scores[best]
+
+
+# -- orchestrator ------------------------------------------------------------
+
+def test_workflow_analytic_chain():
+    dag = chain_dag()
+    goal = Goal("deadline_budget", deadline_s=3600.0, budget_usd=10.0)
+    orch, res = orchestrate(dag, goal, engine="analytic")
+    assert set(res.tasks) == {"train", "finetune", "eval"}
+    assert not res.dropped
+    # chain executes in order on the workflow clock
+    assert res.finish_s["train"] <= res.start_s["finetune"]
+    assert res.finish_s["finetune"] <= res.start_s["eval"]
+    assert res.wall_s == pytest.approx(res.finish_s["eval"])
+    assert res.wall_s <= goal.deadline_s
+    # one shared bill, fully attributed per task
+    assert res.ledger_usd <= goal.budget_usd
+    assert res.cost_usd == pytest.approx(res.ledger_usd, rel=1e-6)
+    ledger = orch.platform.ledger
+    assert set(ledger.job_usd) == {"train", "finetune", "eval"}
+    assert sum(ledger.job_usd.values()) == pytest.approx(res.cost_usd,
+                                                         rel=1e-6)
+
+
+def test_workflow_event_tasks_overlap_on_shared_domain():
+    dag = WorkflowDAG([
+        TaskSpec("a", W, epochs=1, batch_size=512, samples=4096),
+        TaskSpec("b", W, epochs=1, batch_size=512, samples=4096),
+        TaskSpec("join", W, epochs=1, batch_size=512, samples=2048,
+                 deps=("a", "b"), kind="eval"),
+    ])
+    goal = Goal("deadline_budget", deadline_s=3600.0, budget_usd=10.0)
+    orch, res = orchestrate(dag, goal, engine="event", max_workers=16)
+    # a and b ran concurrently: the makespan beats the serial schedule
+    serial = sum(r.wall_s for r in res.tasks.values())
+    assert res.wall_s < serial
+    assert res.start_s["a"] == res.start_s["b"] == 0.0
+    assert res.start_s["join"] == pytest.approx(
+        max(res.finish_s["a"], res.finish_s["b"]))
+    # keep-alive billing stays honest across staggered engine results:
+    # the single param store is billed exactly the cross-task union
+    assert orch.param_store.alive_seconds == pytest.approx(
+        orch.domain.sync_union_s, rel=1e-9)
+
+
+def test_workflow_seed_determinism():
+    def trace():
+        dag = chain_dag(epochs=(1, 1, 1))
+        goal = Goal("deadline_budget", deadline_s=3600.0, budget_usd=10.0)
+        _, res = orchestrate(dag, goal, engine="event", max_workers=16)
+        return res.trace
+    assert trace() == trace()       # bit-identical workflow event log
+
+
+def hpo_workflow(budget=3.0):
+    sweep = HPOSweep("hpo", W, n_trials=8, rungs=2, eta=2,
+                     epochs_per_rung=1, batch_size=512, samples=16384,
+                     seed=3)
+    specs = expand_hpo(sweep)
+    specs.append(TaskSpec("finetune", W, epochs=1, batch_size=512,
+                          samples=16384, deps=sweep_final_tasks(sweep),
+                          kind="finetune", warm_start_from="hpo",
+                          priority=3))
+    dag = WorkflowDAG(specs)
+    goal = Goal("deadline_budget", deadline_s=3600.0, budget_usd=budget)
+    return dag, goal, sweep
+
+
+def test_workflow_hpo_end_to_end():
+    """Acceptance: an 8-trial, 2-rung successive-halving sweep plus a
+    dependent fine-tune completes under one global Goal — ledger within
+    budget, makespan within deadline — and the budget reclaimed from
+    early-stopped losers demonstrably re-allocates: the winning trial's
+    final rung is granted more dollars and runs with more workers than
+    its first rung."""
+    dag, goal, sweep = hpo_workflow()
+    orch, res = orchestrate(dag, goal, engine="event", sweeps=[sweep])
+    # every rung-0 trial and the fine-tune actually trained
+    for name in dag.order:
+        assert res.tasks[name].epochs_done >= 1, name
+    assert not res.dropped
+    assert res.ledger_usd <= goal.budget_usd
+    assert res.wall_s <= goal.deadline_s
+    # the losers were early-stopped: only n/eta survivor slots exist, and
+    # the pool they free flows to the winner's final rung
+    winner, loss = res.winners["hpo"]
+    r0 = f"hpo:r0:t{winner}"
+    r1 = next(n for n, t in res.assignments.items()
+              if t == winner and ":r1:" in n)
+    assert res.allocations[r1].budget_usd > res.allocations[r0].budget_usd
+    assert res.config_of(r1).workers > res.config_of(r0).workers
+    # the surviving rung warm-started from its rung-0 deployment
+    assert winner in orch.tuners["hpo"].configs
+    # the fine-tune warm-starts from the sweep winner and runs last
+    assert res.start_s["finetune"] == pytest.approx(
+        max(res.finish_s[n] for n in sweep_final_tasks(sweep)))
+
+
+def test_workflow_hpo_bit_identical_trace():
+    def run():
+        dag, goal, sweep = hpo_workflow()
+        _, res = orchestrate(dag, goal, engine="event", sweeps=[sweep])
+        return res
+    a, b = run(), run()
+    assert a.trace == b.trace
+    assert a.wall_s == b.wall_s and a.cost_usd == b.cost_usd
+
+
+def test_workflow_tight_budget_truncates_not_overspends():
+    """With a budget too small for every trial, tasks are truncated by
+    their budget stops (zero-epoch trials are legal) — but the ledger
+    never exceeds the global budget."""
+    dag, goal, sweep = hpo_workflow(budget=1.2)
+    orch, res = orchestrate(dag, goal, engine="event", sweeps=[sweep])
+    assert res.ledger_usd <= goal.budget_usd
+    assert set(res.tasks) | set(res.dropped) == set(dag.order)
