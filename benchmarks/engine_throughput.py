@@ -1,0 +1,185 @@
+"""Event-engine throughput harness: the repo's perf trajectory anchor.
+
+Measures the ``EventEngine`` hot path (calendar-queue dispatch, coalesced
+cohorts, vectorized draws, incremental ``SharedLink`` accounting) on a
+fixed scenario grid — fleet sizes {64, 512, 2048, 10000} with and without
+stragglers — and reports events/sec, worker-iterations/sec, and wall time
+per scenario. See ``docs/PERF.md`` for the regression policy.
+
+    PYTHONPATH=src python -m benchmarks.engine_throughput            # full grid
+    PYTHONPATH=src python -m benchmarks.engine_throughput --quick    # CI gate
+    PYTHONPATH=src python -m benchmarks.engine_throughput --update-baseline
+
+The checked-in baseline ``BENCH_engine_throughput.json`` (repo root)
+records both the **pre-PR** engine (measured once from the git tree
+before the overhaul, embedded below as ``PRE_PR_WALL_S``) and the current
+engine. ``--quick`` runs the small rows only and exits non-zero if
+events/sec regresses by more than ``REGRESSION_TOLERANCE`` against the
+baseline — wall-clock noise on shared CI runners is why the gate is 25%,
+not 5%; regenerate the baseline on a quiet machine when the engine
+legitimately changes speed.
+
+"Events" are *logical simulation events* (``EngineResult.sim_events``:
+invocations armed, transfers finished, compute segments, iterations,
+worker completions — counted per member worker, so a coalesced cohort of
+2048 workers scores 2048, keeping the metric machinery-independent). The
+pre-PR engine simulated the identical logical schedule one worker at a
+time, so its events/sec is the same event count over its measured wall.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.serverless import EventEngine, ObjectStore, ParamStore, WORKLOADS
+
+BASELINE_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_engine_throughput.json")
+
+REGRESSION_TOLERANCE = 0.25      # --quick fails beyond this ev/s drop
+
+# (n_workers, straggler_sigma, iterations): per-worker batch 512, memory
+# 2048 MB, resnet18 over "hier". sigma=0 rows exercise the coalesced
+# cohort path; sigma=0.3 rows force per-worker simulation (every worker
+# draws its own straggler factor each iteration).
+SCENARIOS = [
+    (64, 0.0, 10),
+    (512, 0.0, 10),
+    (2048, 0.0, 10),
+    (10000, 0.0, 2),
+    (64, 0.3, 10),
+    (512, 0.3, 10),
+    (2048, 0.3, 10),
+]
+QUICK = {(64, 0.0), (512, 0.0), (64, 0.3), (512, 0.3)}
+
+# Wall seconds of the pre-overhaul engine (commit f90646a lineage) on the
+# identical scenario grid, measured on the same machine that produced the
+# checked-in baseline. The old engine has no sim_events counter; its
+# events/sec is the current engine's (deterministic) logical event count
+# for the scenario divided by this wall.
+PRE_PR_WALL_S = {
+    "n64_s0.0": 0.108,
+    "n512_s0.0": 5.187,
+    "n2048_s0.0": 89.513,
+    "n10000_s0.0": 677.102,
+    "n64_s0.3": 0.102,
+    "n512_s0.3": 4.650,
+    "n2048_s0.3": 82.332,
+}
+
+
+def key(n: int, sigma: float) -> str:
+    return f"n{n}_s{sigma}"
+
+
+def run_scenario(n: int, sigma: float, iters: int) -> dict:
+    gb = 512 * n
+    eng = EventEngine(WORKLOADS["resnet18"], "hier", n, 2048, gb,
+                      ParamStore(), ObjectStore(), samples=iters * gb,
+                      straggler_sigma=sigma, seed=42, record_trace=False)
+    t0 = time.perf_counter()
+    res = eng.run()
+    wall = time.perf_counter() - t0
+    return {
+        "n": n, "sigma": sigma, "iters": res.iters_done,
+        "wall_s": round(wall, 4),
+        "sim_events": res.sim_events,
+        "events_per_s": round(res.sim_events / wall, 1),
+        "worker_iters_per_s": round(res.iters_done * n / wall, 1),
+        "sim_wall_s": res.wall_s,
+        "coalesced": eng.coalesced,
+    }
+
+
+def build_report(rows: list) -> dict:
+    current = {key(r["n"], r["sigma"]): r for r in rows}
+    pre = {}
+    speedup = {}
+    for k, r in current.items():
+        old_wall = PRE_PR_WALL_S.get(k)
+        if old_wall is None:
+            continue
+        pre[k] = {"wall_s": old_wall,
+                  "events_per_s": round(r["sim_events"] / old_wall, 1)}
+        speedup[k] = round(old_wall / r["wall_s"], 1)
+    return {
+        "scenario": "resnet18/hier, per-worker batch 512, 2048 MB, seed 42",
+        "pre_pr": pre,
+        "current": current,
+        "speedup_wall": speedup,
+    }
+
+
+def check_regression(rows: list, baseline: dict) -> list:
+    """Rows whose events/sec fell >REGRESSION_TOLERANCE below baseline."""
+    failures = []
+    base = baseline.get("current", {})
+    for r in rows:
+        k = key(r["n"], r["sigma"])
+        ref = base.get(k, {}).get("events_per_s")
+        if not ref:
+            continue
+        floor = ref * (1.0 - REGRESSION_TOLERANCE)
+        if r["events_per_s"] < floor:
+            failures.append(
+                f"{k}: {r['events_per_s']:.0f} ev/s < {floor:.0f} "
+                f"(baseline {ref:.0f} - {REGRESSION_TOLERANCE:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small rows only; fail on ev/s regression vs "
+                         "the checked-in baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help=f"rewrite {os.path.basename(BASELINE_PATH)}")
+    args = ap.parse_args(argv)
+
+    grid = [(n, s, i) for n, s, i in SCENARIOS
+            if not args.quick or (n, s) in QUICK]
+    rows = []
+    print(f"{'n':>6} {'sigma':>5} {'iters':>5} {'wall_s':>9} "
+          f"{'events':>9} {'ev/s':>12} {'w-iters/s':>10} {'coalesced':>9}")
+    for n, sigma, iters in grid:
+        r = run_scenario(n, sigma, iters)
+        rows.append(r)
+        print(f"{n:>6} {sigma:>5} {r['iters']:>5} {r['wall_s']:>9.3f} "
+              f"{r['sim_events']:>9} {r['events_per_s']:>12.1f} "
+              f"{r['worker_iters_per_s']:>10.1f} {str(r['coalesced']):>9}")
+
+    if args.quick and not args.update_baseline:
+        try:
+            with open(BASELINE_PATH) as f:
+                baseline = json.load(f)
+        except FileNotFoundError:
+            print(f"no baseline at {BASELINE_PATH}; run --update-baseline",
+                  file=sys.stderr)
+            return 1
+        failures = check_regression(rows, baseline)
+        for line in failures:
+            print(f"REGRESSION {line}", file=sys.stderr)
+        if failures:
+            return 1
+        print(f"quick gate OK: all rows within {REGRESSION_TOLERANCE:.0%} "
+              f"of baseline events/sec")
+        return 0
+
+    report = build_report(rows)
+    for k, s in sorted(report["speedup_wall"].items()):
+        print(f"speedup {k}: {s}x wall vs pre-PR engine")
+    if args.update_baseline or not os.path.exists(BASELINE_PATH):
+        with open(BASELINE_PATH, "w") as f:
+            json.dump(report, f, indent=1)
+            f.write("\n")
+        print(f"wrote {BASELINE_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

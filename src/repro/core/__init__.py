@@ -8,6 +8,8 @@
  - cost_model:  serverless + VM cost/time models
  - elastic:     on-the-fly worker-fleet rescaling for the real-JAX path
  - constraints: user-centric goals (deadline / budget)
+ - probe_cache: memoized epoch_estimate/profile_cost probes for the BO
+ - rng:         named deterministic RandomState streams
 """
 from repro.core.bayes_opt import (  # noqa: F401
     GP, BayesianOptimizer, Config, ConfigSpace, expected_improvement)
@@ -17,5 +19,7 @@ from repro.core.constraints import Goal  # noqa: F401
 from repro.core.hier_sync import (  # noqa: F401
     STRATEGIES, allreduce_mean, make_sync_grad_fn, ps_mean,
     scatter_reduce_mean, sync_grads, two_level_mean)
+from repro.core.probe_cache import DEFAULT_CACHE, ProbeCache  # noqa: F401
+from repro.core.rng import stream, stream_seed  # noqa: F401
 from repro.core.scheduler import (  # noqa: F401
     EpochPlan, RunResult, TaskScheduler, TraceEvent)

@@ -184,10 +184,15 @@ class BayesianOptimizer:
         self.constraint_limit = constraint_limit
         self.n_init = n_init
         self.n_candidates = n_candidates
-        self.rng = np.random.RandomState(seed)
+        from repro.core.rng import base_stream
+        self.rng = base_stream(seed)
         self.ei_tolerance = ei_tolerance
         self.max_iters = max_iters
         self.obs: List[Observation] = []
+        # unit-cube embedding per observation, computed once at observe
+        # time: suggest() refits the GP on every call, and re-embedding
+        # the whole history each time was the dominant non-GP cost
+        self._X: List[np.ndarray] = []
 
     # -- bookkeeping ---------------------------------------------------------
     def observe(self, config: Config, objective: float,
@@ -195,6 +200,7 @@ class BayesianOptimizer:
         self.obs.append(Observation(config, float(objective),
                                     None if constraint is None
                                     else float(constraint)))
+        self._X.append(config.as_unit(self.space))
 
     def _feasible(self, o: Observation) -> bool:
         return (self.constraint_limit is None or o.constraint is None
@@ -209,7 +215,7 @@ class BayesianOptimizer:
     def suggest(self) -> Config:
         if len(self.obs) < self.n_init:
             return self.space.sample(self.rng, 1)[0]
-        X = np.stack([o.config.as_unit(self.space) for o in self.obs])
+        X = np.stack(self._X)
         y = np.array([o.objective for o in self.obs])
         gp = GP().fit(X, y)
         cands = self.space.sample(self.rng, self.n_candidates)

@@ -32,6 +32,8 @@ from repro.core.constraints import (Goal, compression_inflation,
                                     staleness_inflation)
 from repro.core.cost_model import epoch_estimate, profile_cost
 from repro.core.monitor import ThroughputMonitor
+from repro.core.probe_cache import DEFAULT_CACHE, ProbeCache
+from repro.core.rng import base_stream
 from repro.serverless.platform import ServerlessPlatform, fleet_from_config
 from repro.serverless.stores import ObjectStore, ParamStore
 from repro.serverless.worker import Workload
@@ -144,6 +146,7 @@ class TaskScheduler:
                  engine: str = "analytic",
                  engine_opts: Optional[Dict] = None,
                  mid_epoch_adapt: bool = True,
+                 probe_cache: Optional[ProbeCache] = DEFAULT_CACHE,
                  job: str = ""):
         self.platform = platform
         self.object_store = object_store
@@ -168,6 +171,10 @@ class TaskScheduler:
         self.engine = engine
         self.engine_opts = dict(engine_opts or {})
         self.mid_epoch_adapt = mid_epoch_adapt
+        # memo table for the analytic probes (epoch_estimate/profile_cost):
+        # shared process-wide by default so every scheduler reuses every
+        # other's probes; pass None to recompute every closed form
+        self.probe_cache = probe_cache
         # ledger attribution label: several workflow tasks billing one
         # shared platform stay separable in ``ledger.job_usd``
         self.job = job
@@ -198,6 +205,16 @@ class TaskScheduler:
                                               else 0),
                                    pipeline_depth=max(config.pipeline_depth,
                                                       1))
+
+    def _epoch_estimate(self, *args, **kwargs):
+        if self.probe_cache is not None:
+            return self.probe_cache.epoch_estimate(*args, **kwargs)
+        return epoch_estimate(*args, **kwargs)
+
+    def _profile_cost(self, *args, **kwargs):
+        if self.probe_cache is not None:
+            return self.probe_cache.profile_cost(*args, **kwargs)
+        return profile_cost(*args, **kwargs)
 
     # -- Bayesian re-optimization (triggered on training-dynamics change) ----
     def optimize(self, w: Workload, batch: int, goal: Goal,
@@ -234,7 +251,7 @@ class TaskScheduler:
         while not bo.done():
             c = seeds.pop(0) if seeds else bo.suggest()
             comm = self._comm_for(c)
-            pt, pu, _ = profile_cost(
+            pt, pu, _ = self._profile_cost(
                 w, comm, c, batch, self.param_store, self.object_store,
                 self.profile_iters, framework_init_s=self.framework_init_s,
                 cold_start_s=self.cold_start_s)
@@ -250,7 +267,7 @@ class TaskScheduler:
                 continue
             t_prof += pt
             usd_prof += pu
-            est = epoch_estimate(
+            est = self._epoch_estimate(
                 w, comm, c, batch, self.param_store, self.object_store,
                 framework_init_s=self.framework_init_s,
                 cold_start_s=self.cold_start_s, samples=samples)
@@ -329,7 +346,11 @@ class TaskScheduler:
                           max_duration_s=self.platform.max_duration_s,
                           samples=remaining,
                           seed=self.seed + 7919 * epoch_i + attempt,
-                          on_iteration=on_it, trace_enabled=False, **opts)
+                          on_iteration=on_it, **opts)
+            # perf default: engine epochs skip trace accumulation unless
+            # the caller's engine_opts asked for it (either spelling)
+            if "trace_enabled" not in kwargs:
+                kwargs.setdefault("record_trace", False)
             r = yield EngineRequest(
                 at_t=t_base + wall + t_prof,
                 build=lambda args=args, kwargs=kwargs, **extra: EventEngine(
@@ -419,7 +440,7 @@ class TaskScheduler:
         t, cost = st.t, st.cost
         t_prof, usd_prof = st.t_prof, st.usd_prof
         epochs_done = st.epochs_done
-        rng = np.random.RandomState(self.seed)
+        rng = base_stream(self.seed)
         if st.rng_state is not None:
             rng.set_state(st.rng_state)
         executed = 0
@@ -463,7 +484,7 @@ class TaskScheduler:
             if ((stop_at_budget and goal.budget_usd is not None)
                     or (self.engine == "event" and stop_at_deadline
                         and goal.deadline_s is not None)):
-                est_pre = epoch_estimate(
+                est_pre = self._epoch_estimate(
                     plan.workload, self._comm_for(config), config,
                     plan.batch_size, self.param_store, self.object_store,
                     framework_init_s=self.framework_init_s,
@@ -505,7 +526,7 @@ class TaskScheduler:
                     if est_pre.wall_s > 0:
                         st.time_infl = max(1.0, wall / est_pre.wall_s)
             else:
-                est = est_pre if est_pre is not None else epoch_estimate(
+                est = est_pre if est_pre is not None else self._epoch_estimate(
                     plan.workload, self._comm_for(config), config,
                     plan.batch_size, self.param_store, self.object_store,
                     framework_init_s=self.framework_init_s,

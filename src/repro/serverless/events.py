@@ -76,6 +76,24 @@ This makes the paper's dynamics first-class:
 In the zero-variance, zero-failure, bsp limit the engine reproduces
 ``epoch_estimate`` wall-clock and cost within 1% (tested); with any
 variance it yields the tail behavior the analytic path cannot express.
+
+Throughput machinery (the 10k-worker regime; see docs/PERF.md):
+
+  - the event queue is a bucketed **calendar queue** dispatching
+    ``(t, seq, fn, arg)`` records — hot events are prebound methods with
+    a tuple payload, not a fresh closure per event;
+  - stochastic draws are **vectorized**: per-epoch ``(n, iters)`` blocks
+    of straggler multipliers and failure outcomes are drawn in one numpy
+    call per stream and consumed in per-worker attempt order, so
+    same-seed runs stay bit-identical;
+  - in the deterministic homogeneous bsp regime, identical workers that
+    move in lockstep are **coalesced** into cohorts (split only at
+    CommPlan ``fan_in`` boundaries) that advance as one state machine —
+    per-worker billing records and trace lines are still emitted, so
+    every bookkeeping invariant is preserved exactly;
+  - ``record_trace=False`` skips trace-line accumulation entirely;
+  - per-event fleet scans (min-iteration, all-finished) are replaced by
+    an iteration histogram and an unfinished counter.
 """
 from __future__ import annotations
 
@@ -87,6 +105,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import rng as rng_streams
 from repro.serverless.platform import (CHECKPOINT_RESTORE_S,
                                        DATA_OBJECT_BYTES, LAMBDA_GB_SECOND,
                                        LAMBDA_MAX_DURATION_S,
@@ -102,18 +121,104 @@ from repro.serverless.worker import (Workload, compute_time,
 _EPS_GB = 1e-12          # flow remainder considered complete (~1e-3 byte)
 
 
+class CalendarQueue:
+    """Bucketed future-event list: a ring of time-sliced buckets, each a
+    small heap. Push hashes an event to the bucket covering its
+    timestamp; pop scans forward from the current bucket, so dequeue
+    order is exactly the ``(t, seq)`` total order a global heap gives,
+    with O(1) expected push/pop instead of O(log n).
+
+    The bucket count doubles (halves) when occupancy grows (shrinks)
+    past 2 events/bucket, and the bucket width is re-derived from the
+    observed inter-event gaps on each resize (Brown's calendar-queue
+    heuristic). A scan that walks a whole empty "year" jumps straight to
+    the bucket holding the global minimum, so sparse far-future events
+    (keep-alive caps, shock arrivals) cannot stall the scan."""
+
+    __slots__ = ("_nb", "_width", "_buckets", "_cur_abs", "_size")
+
+    def __init__(self, nbuckets: int = 32, width: float = 1.0):
+        self._nb = nbuckets
+        self._width = width
+        self._buckets: List[list] = [[] for _ in range(nbuckets)]
+        self._cur_abs = 0            # absolute (un-wrapped) bucket index
+        self._size = 0
+
+    def __len__(self) -> int:
+        return self._size
+
+    def __bool__(self) -> bool:
+        return self._size > 0
+
+    def push(self, ev: tuple):
+        """``ev`` sorts by its leading ``(t, seq)`` fields."""
+        ab = int(ev[0] / self._width)
+        if ab < self._cur_abs:       # same-instant event during dispatch
+            ab = self._cur_abs
+        if self._size == 0:
+            self._cur_abs = ab       # fast-forward an idle scan position
+        heapq.heappush(self._buckets[ab % self._nb], ev)
+        self._size += 1
+        if self._size > 2 * self._nb:
+            self._resize(2 * self._nb)
+
+    def pop(self) -> tuple:
+        if not self._size:
+            raise IndexError("pop from empty CalendarQueue")
+        if self._nb > 32 and self._size < self._nb // 6:
+            self._resize(max(self._nb // 2, 32))
+        nb, width, buckets = self._nb, self._width, self._buckets
+        ab = self._cur_abs
+        scanned = 0
+        while True:
+            b = buckets[ab % nb]
+            if b and b[0][0] < (ab + 1) * width:
+                self._cur_abs = ab
+                self._size -= 1
+                return heapq.heappop(b)
+            ab += 1
+            scanned += 1
+            if scanned > nb:
+                # a full year of buckets is empty at this resolution:
+                # jump to the bucket holding the global minimum
+                head = min(b[0] for b in buckets if b)
+                ab = max(int(head[0] / width), self._cur_abs)
+                scanned = 0
+
+    def _resize(self, new_nb: int):
+        evs = [e for b in self._buckets for e in b]
+        evs.sort()
+        gaps = [b[0] - a[0] for a, b in zip(evs, evs[1:]) if b[0] > a[0]]
+        if gaps:
+            # ~3 events per bucket-width keeps both the scan and the
+            # per-bucket heaps short
+            self._width = max(3.0 * sum(gaps) / len(gaps), 1e-9)
+        self._nb = new_nb
+        self._buckets = [[] for _ in range(new_nb)]
+        base = int(evs[0][0] / self._width) if evs else 0
+        self._cur_abs = base
+        for e in evs:
+            ab = max(int(e[0] / self._width), base)
+            self._buckets[ab % new_nb].append(e)
+        for b in self._buckets:
+            heapq.heapify(b)
+
+
 class _Transfer:
     """A pausable store transfer: ``requests * latency`` of setup, then a
     flow on the link at the processor-sharing rate. ``cap_gbps`` is the
-    issuing worker's function-network limit (per-flow cap on the link)."""
+    issuing worker's function-network limit (per-flow cap on the link).
+    ``weight`` counts the member streams a coalesced cohort's single
+    flow stands for (bytes and rate stay per member)."""
     _ids = itertools.count()
 
     __slots__ = ("fid", "link", "remaining_gb", "total_gb", "latency_left",
-                 "setup_latency_s", "cb", "token", "is_sync", "cap_gbps")
+                 "setup_latency_s", "cb", "token", "is_sync", "cap_gbps",
+                 "weight")
 
     def __init__(self, link: SharedLink, nbytes: float, latency_s: float,
                  cb: Callable[[], None], is_sync: bool,
-                 cap_gbps: Optional[float] = None):
+                 cap_gbps: Optional[float] = None, weight: int = 1):
         self.fid = next(self._ids)
         self.link = link
         self.remaining_gb = nbytes / 1e9
@@ -124,6 +229,7 @@ class _Transfer:
         self.token = 0          # invalidates scheduled setup events on pause
         self.is_sync = is_sync  # gradient sync (param-store keep-alive window)
         self.cap_gbps = cap_gbps
+        self.weight = weight
 
 
 class ContentionDomain:
@@ -143,12 +249,13 @@ class ContentionDomain:
 
     def __init__(self):
         self.now = 0.0
-        self._q: List[Tuple[float, int, Callable]] = []
+        self._q = CalendarQueue()
         self._seq = itertools.count()
         self._links: Dict[Tuple[int, str], SharedLink] = {}
         self._engines: List["EventEngine"] = []
         self._groups: Dict[int, List["EventEngine"]] = {}
         self._running = False
+        self.dispatched = 0     # queue events executed (profiling counter)
         # union of time *any* engine's sync transfers are outstanding: the
         # honest keep-alive window for one param store shared across jobs
         # (per-engine sync_s sums would double-bill the overlap)
@@ -162,7 +269,13 @@ class ContentionDomain:
         self._store_billed: Dict[int, float] = {}
 
     def at(self, t: float, fn: Callable):
-        heapq.heappush(self._q, (t, next(self._seq), fn))
+        self._q.push((t, next(self._seq), fn, None))
+
+    def at2(self, t: float, fn: Callable, arg):
+        """Schedule a record event: ``fn(arg)`` at ``t``. ``fn`` is a
+        prebound method and ``arg`` its payload tuple — no per-event
+        closure is allocated."""
+        self._q.push((t, next(self._seq), fn, arg))
 
     def link_for(self, store, kind: str) -> SharedLink:
         """The one SharedLink all engines in this domain use for ``store``
@@ -204,23 +317,29 @@ class ContentionDomain:
         try:
             for eng in list(self._engines):
                 self._launch(eng)
-            while self._q:
-                t, _, fn = heapq.heappop(self._q)
+            q = self._q
+            while q:
+                t, _, fn, arg = q.pop()
                 if t > self.now:
                     dt = t - self.now
-                    if any(e._sync_active > 0 for e in self._engines):
+                    engines = self._engines
+                    if any(e._sync_active > 0 for e in engines):
                         self.sync_union_s += dt
-                    for sid, engs in self._groups.items():
-                        if any(e._sync_active > 0 for e in engs):
-                            self._store_sync[sid] = (
-                                self._store_sync.get(sid, 0.0) + dt)
-                    for eng in self._engines:
-                        if eng._sync_active > 0:
-                            eng._sync_busy += dt
+                        for sid, engs in self._groups.items():
+                            if any(e._sync_active > 0 for e in engs):
+                                self._store_sync[sid] = (
+                                    self._store_sync.get(sid, 0.0) + dt)
+                        for eng in engines:
+                            if eng._sync_active > 0:
+                                eng._sync_busy += dt
                     for link in self._links.values():
                         link.progress(t)
                     self.now = t
-                fn()
+                self.dispatched += 1
+                if arg is None:
+                    fn()
+                else:
+                    fn(arg)
         finally:
             self._running = False
         for eng in self._engines:
@@ -271,23 +390,98 @@ class EngineResult:
     stopped_early: bool
     trace: List[str]
     shock_events: int = 0        # shocks that killed at least one worker
+    sim_events: int = 0          # logical per-worker state transitions
+                                 # (cohort-weighted: comparable whether or
+                                 # not workers were coalesced)
 
     @property
     def cost_usd(self) -> float:
         return self.lambda_usd + self.store_usd
 
 
-class _WorkerState:
-    __slots__ = ("wid", "rng", "it", "inv_rec", "inv_count", "inv_gen",
-                 "inv_cont", "cap_gen", "seg_gen", "seg_end", "activity",
-                 "pending", "restarting", "finished")
+class _FleetDraws:
+    """Vectorized per-(worker, attempt) stochastic draws.
 
-    def __init__(self, wid: int, seed: int, job_idx: int = 0):
-        self.wid = wid
-        self.rng = np.random.RandomState(
-            (seed * 1_000_003 + wid + 611_953 * job_idx) % 2**31)
+    Straggler z-scores, failure coins, and failure fractions each come
+    from an independent named stream (``repro.core.rng``) and are drawn
+    as whole ``(n, block)`` matrices — one numpy call per epoch instead
+    of one scalar call per worker-iteration. Column ``k`` is a worker's
+    k-th compute *attempt* (a retry after a failure consumes the next
+    column), so same-seed runs consume identical values in identical
+    order and stay bit-reproducible. Blocks extend lazily when retries
+    run past the pre-drawn epoch."""
+
+    __slots__ = ("n", "sigma", "failure_rate", "_block", "_z_rng", "_u_rng",
+                 "_f_rng", "_factor", "_fail_u", "_frac", "_cols")
+
+    def __init__(self, n: int, sigma: float, failure_rate: float, seed: int,
+                 job_idx: int, iters: int):
+        self.n = n
+        self.sigma = sigma
+        self.failure_rate = failure_rate
+        self._block = min(iters + 2, 1024)
+        self._z_rng = rng_streams.stream(seed, "straggler", job_idx)
+        self._u_rng = rng_streams.stream(seed, "failure", job_idx)
+        self._f_rng = rng_streams.stream(seed, "failfrac", job_idx)
+        self._factor: Optional[np.ndarray] = None
+        self._fail_u: Optional[np.ndarray] = None
+        self._frac: Optional[np.ndarray] = None
+        self._cols = 0
+
+    def _grow(self, k: int):
+        add = self._block
+        while k >= self._cols + add:
+            add += self._block
+        if self.sigma > 0.0:
+            z = self._z_rng.standard_normal((self.n, add))
+            blk = np.exp(self.sigma * z - 0.5 * self.sigma * self.sigma)
+            self._factor = (blk if self._factor is None else
+                            np.concatenate([self._factor, blk], axis=1))
+        if self.failure_rate > 0.0:
+            u = self._u_rng.random_sample((self.n, add))
+            f = self._f_rng.random_sample((self.n, add))
+            self._fail_u = (u if self._fail_u is None else
+                            np.concatenate([self._fail_u, u], axis=1))
+            self._frac = (f if self._frac is None else
+                          np.concatenate([self._frac, f], axis=1))
+        self._cols += add
+
+    def factor(self, wid: int, k: int) -> float:
+        """Lognormal straggler multiplier for worker ``wid``, attempt
+        ``k`` (1.0 exactly in the zero-variance limit)."""
+        if self.sigma <= 0.0:
+            return 1.0
+        if k >= self._cols:
+            self._grow(k)
+        return float(self._factor[wid, k])
+
+    def failed(self, wid: int, k: int) -> Tuple[bool, float]:
+        """(did attempt ``k`` fail mid-iteration, fraction completed)."""
+        if self.failure_rate <= 0.0:
+            return False, 0.0
+        if k >= self._cols:
+            self._grow(k)
+        return (bool(self._fail_u[wid, k] < self.failure_rate),
+                float(self._frac[wid, k]))
+
+
+class _WorkerState:
+    """One engine state machine: a single worker, or a coalesced cohort
+    of ``count`` identical workers moving in lockstep (``members`` is the
+    contiguous worker-id range; ``wid`` is the leader). All billing
+    records, checkpoints, and trace lines are still per member."""
+
+    __slots__ = ("wid", "members", "count", "it", "draws", "inv_recs",
+                 "inv_count", "inv_gen", "inv_cont", "cap_gen", "seg_gen",
+                 "seg_end", "activity", "pending", "restarting", "finished")
+
+    def __init__(self, members: range):
+        self.wid = members.start
+        self.members = members
+        self.count = len(members)
         self.it = 0                   # completed iterations
-        self.inv_rec: Optional[InvocationRecord] = None
+        self.draws = 0                # compute attempts consumed (draw cursor)
+        self.inv_recs: List[InvocationRecord] = []
         self.inv_count = 0
         self.inv_gen = 0              # invalidates stale init-window events
         self.inv_cont = None          # continuation owed by the init window
@@ -347,18 +541,19 @@ class _PipelineRun:
         self.computing = True
         self.gen += 1
         self.comp_end = self.eng.now + dur
+        self.eng.domain.at2(self.comp_end, self.eng._pipe_seg_done,
+                            (self, self.gen))
 
-        def done(gen=self.gen):
-            if gen != self.gen or not self.computing:
-                return
-            self.computing = False
-            self.computed += 1
-            if self.computed < self.d:
-                self._start_compute(self.seg_s)
-            self._pump_ul()
-            self._maybe_finish()
-
-        self.eng._at(self.comp_end, done)
+    def _seg_done(self, gen: int):
+        if gen != self.gen or not self.computing:
+            return
+        self.computing = False
+        self.computed += 1
+        self.eng._levents += self.w.count
+        if self.computed < self.d:
+            self._start_compute(self.seg_s)
+        self._pump_ul()
+        self._maybe_finish()
 
     # -- transfer lane -------------------------------------------------------
     def _pump_ul(self):
@@ -426,7 +621,14 @@ class EventEngine:
     """Run one epoch of ``workload`` under deployment ``(n, memory_mb)``
     — or a heterogeneous ``fleet`` — as a discrete-event simulation. See
     the module docstring for the semantics; construction mirrors
-    ``epoch_estimate``'s signature so the two paths are interchangeable."""
+    ``epoch_estimate``'s signature so the two paths are interchangeable.
+
+    ``record_trace=False`` skips trace accumulation (perf runs);
+    ``trace_enabled`` is the accepted legacy alias. ``coalesce`` controls
+    lockstep-cohort batching: ``None`` auto-enables it exactly when it is
+    provably exact (homogeneous fleet, bsp, zero variance, zero failures,
+    no shocks, unpipelined plan), ``True`` demands it (ValueError if the
+    configuration diverges), ``False`` forces per-worker simulation."""
 
     def __init__(self, workload: Workload, scheme: CommLike, n_workers: int,
                  memory_mb: float, global_batch: int,
@@ -443,7 +645,9 @@ class EventEngine:
                  slowdown_at_iter: Optional[int] = None,
                  slowdown_factor: float = 1.0,
                  on_iteration: Optional[Callable] = None,
-                 trace_enabled: bool = True,
+                 record_trace: Optional[bool] = None,
+                 trace_enabled: Optional[bool] = None,
+                 coalesce: Optional[bool] = None,
                  start_at: float = 0.0,
                  on_complete: Optional[Callable] = None):
         self.w = workload
@@ -479,7 +683,9 @@ class EventEngine:
         self.slowdown_at_iter = slowdown_at_iter
         self.slowdown_factor = slowdown_factor
         self.on_iteration = on_iteration
-        self.trace_enabled = trace_enabled
+        if record_trace is None:
+            record_trace = True if trace_enabled is None else trace_enabled
+        self.record_trace = self.trace_enabled = record_trace
         # admission offset on a shared domain clock: a workflow task whose
         # dependencies finish at t > 0 starts exactly then. wall_s stays
         # relative to the engine's own start (``_t0``); iter_times remain
@@ -531,10 +737,19 @@ class EventEngine:
         }
         self.ckpt_bytes = 12.0 * workload.param_count  # params + Adam m,v
 
-        self._workers = [_WorkerState(i, seed, self._job_idx)
-                         for i in range(self.n)]
-        self._shock_rng = np.random.RandomState(
-            (seed * 2_147_483_029 + 97 + self._job_idx) % 2**31)
+        eligible = self._coalesce_eligible()
+        if coalesce is None:
+            coalesce = eligible
+        elif coalesce and not eligible:
+            raise ValueError(
+                "coalesce=True requires the deterministic lockstep regime: "
+                "homogeneous fleet, bsp, straggler_sigma=0, failure_rate=0, "
+                "no shocks, unpipelined plan")
+        self.coalesced = coalesce
+        self._workers = [_WorkerState(g) for g in self._cohorts(coalesce)]
+        self._draws = _FleetDraws(self.n, self.sigma, self.failure_rate,
+                                  seed, self._job_idx, self.iters)
+        self._shock_rng = rng_streams.shock_stream(seed, self._job_idx)
         self._barriers: Dict[Tuple, Dict] = {}
         self._gate_waiters: List[Tuple[_WorkerState, Callable]] = []
         self._started = False
@@ -547,12 +762,43 @@ class EventEngine:
         self._cap_restarts = 0
         self._failures = 0
         self._shock_events = 0
+        self._levents = 0            # logical (cohort-weighted) transitions
+        # O(1) fleet aggregates (replacing per-event fleet scans):
+        # worker count per completed-iteration value, the running minimum,
+        # and the not-yet-finished worker count
+        self._it_hist = [0] * (self.iters + 2)
+        self._it_hist[0] = self.n
+        self._min_it = 0
+        self._unfinished = self.n
         # union of time any gradient-sync transfer is outstanding — the
         # param store's keep-alive window (matches the analytic sync_s)
         self._sync_active = 0
         self._sync_busy = 0.0
         self._wall = 0.0
         self._result: Optional[EngineResult] = None
+
+    def _coalesce_eligible(self) -> bool:
+        """Cohort batching is exact only when identical workers provably
+        move in lockstep: every stochastic source off, bsp barriers, a
+        homogeneous fleet, and no second activity lane."""
+        return (self.mode == "bsp" and self.sigma == 0.0
+                and self.failure_rate == 0.0 and self.shocks is None
+                and self.fleet.is_homogeneous
+                and self.plan.pipeline_depth <= 1)
+
+    def _cohorts(self, coalesce: bool) -> List[range]:
+        if not coalesce:
+            return [range(i, i + 1) for i in range(self.n)]
+        # split only where plan participation diverges: workers on the
+        # same side of every phase's fan_in follow identical paths
+        cuts = sorted({min(ph.fan_in, self.n)
+                       for ph in self.plan.phases} | {self.n})
+        groups, prev = [], 0
+        for c in cuts:
+            if c > prev:
+                groups.append(range(prev, c))
+                prev = c
+        return groups
 
     # -- primitives ----------------------------------------------------------
     @property
@@ -564,13 +810,27 @@ class EventEngine:
 
     def _tr(self, w: _WorkerState, what: str):
         if self.trace_enabled:
-            self._trace.append(f"{self.now:.6f} w{w.wid} {what}")
+            stamp = f"{self.now:.6f}"
+            if w.count == 1:
+                self._trace.append(f"{stamp} w{w.wid} {what}")
+            else:
+                self._trace.extend(f"{stamp} w{wid} {what}"
+                                   for wid in w.members)
 
-    def _ckpt_key(self, w: _WorkerState) -> str:
-        """Checkpoint blob key, namespaced by the engine's job index so
-        concurrent workflow tasks sharing one ObjectStore never clobber
-        each other's restart state (a private domain is always j0)."""
-        return f"ckpt/j{self._job_idx}/w{w.wid}"
+    def _ckpt_put(self, w: _WorkerState):
+        """Checkpoint every member's blob, namespaced by the engine's job
+        index so concurrent workflow tasks sharing one ObjectStore never
+        clobber each other's restart state (a private domain is j0)."""
+        it = w.it
+        for wid in w.members:
+            self.object_store.put(f"ckpt/j{self._job_idx}/w{wid}",
+                                  {"iter": it}, nbytes=self.ckpt_bytes)
+
+    def _ckpt_restore(self, w: _WorkerState):
+        for wid in w.members:
+            key = f"ckpt/j{self._job_idx}/w{wid}"
+            if key in self.object_store.blobs:
+                self.object_store.get(key, nbytes=self.ckpt_bytes)
 
     def _reschedule(self, link: SharedLink):
         """Flow set changed: invalidate outstanding completion predictions
@@ -579,26 +839,25 @@ class EventEngine:
         if not link.flows:
             return
         t_next = self.now + link.next_completion_dt()
-        self._at(t_next, lambda gen=link.generation: self._link_event(link, gen))
+        self.domain.at2(t_next, self._link_event, (link, link.generation))
 
-    def _link_event(self, link: SharedLink, gen: int):
+    def _link_event(self, payload):
+        link, gen = payload
         if gen != link.generation:
             return                               # stale prediction
-        done = [tr for tr in link.flows.values()
-                if tr.remaining_gb <= _EPS_GB]
-        for tr in done:
-            del link.flows[tr.fid]
+        done = link.take_drained(_EPS_GB)
         self._reschedule(link)
         for tr in done:
             tr.cb()
 
     def _make_transfer(self, w: _WorkerState, store: str, nbytes: float,
                        requests: int, done: Callable,
-                       is_sync: bool) -> _Transfer:
+                       is_sync: bool, weight: int = 1) -> _Transfer:
         """Create a transfer whose completion callback ``done`` also
         settles the sync-window counter. Claiming an activity slot is the
         caller's job (the serial path uses the worker's single slot, the
-        pipeline window its transfer lane)."""
+        pipeline window its transfer lane). ``nbytes`` is per member;
+        ``weight`` is the cohort's member count (its claim on the link)."""
         link = self.links[store]
 
         def finished():
@@ -608,7 +867,7 @@ class EventEngine:
 
         cap = self.net_cap[w.wid] if store == "param" else None
         tr = _Transfer(link, nbytes, link.latency_s * max(requests, 1),
-                       finished, is_sync, cap_gbps=cap)
+                       finished, is_sync, cap_gbps=cap, weight=weight)
         if is_sync:
             self._sync_active += 1
         return tr
@@ -617,36 +876,38 @@ class EventEngine:
                         requests: int, cont: Callable, is_sync: bool = False):
         def finished():
             w.activity = None
+            self._levents += w.count
             cont()
 
         tr = self._make_transfer(w, store, nbytes, requests, finished,
-                                 is_sync)
+                                 is_sync, weight=w.count)
         w.activity = ("transfer", tr, tr.cb)
         self._begin_setup(w, tr)
 
     def _begin_setup(self, w: _WorkerState, tr: _Transfer):
         link = tr.link
-        link.setup += 1
         tr.token += 1
-
-        def activate(token=tr.token):
-            if token != tr.token:
-                return                           # paused during setup
-            link.setup -= 1
-            tr.latency_left = 0.0
-            if tr.remaining_gb <= _EPS_GB:
-                self._reschedule(link)           # busy-window bookkeeping
-                tr.cb()                          # cb releases the activity slot
-                return
-            link.flows[tr.fid] = tr
-            self._reschedule(link)
-
         if tr.latency_left > 0:
-            self._at(self.now + tr.latency_left, activate)
+            link.setup += 1
+            self.domain.at2(self.now + tr.latency_left, self._setup_done,
+                            (tr, tr.token))
         else:
-            link.setup -= 1      # resume directly into the flow
-            link.flows[tr.fid] = tr
+            link.add_flow(tr)        # resume directly into the flow
             self._reschedule(link)
+
+    def _setup_done(self, payload):
+        tr, token = payload
+        if token != tr.token:
+            return                               # paused during setup
+        link = tr.link
+        link.setup -= 1
+        tr.latency_left = 0.0
+        if tr.remaining_gb <= _EPS_GB:
+            self._reschedule(link)               # busy-window bookkeeping
+            tr.cb()                              # cb releases the activity slot
+            return
+        link.add_flow(tr)
+        self._reschedule(link)
 
     def _do_compute(self, w: _WorkerState, duration: float, cont: Callable,
                     redo: Optional[Callable] = None):
@@ -656,47 +917,54 @@ class EventEngine:
         w.activity = ("compute", cont, redo)
         w.seg_end = self.now + duration
         w.seg_gen += 1
+        self.domain.at2(w.seg_end, self._compute_done, (w, w.seg_gen))
 
-        def done(gen=w.seg_gen):
-            if gen != w.seg_gen:
-                return
-            w.activity = None
-            cont()
-
-        self._at(w.seg_end, done)
+    def _compute_done(self, payload):
+        w, gen = payload
+        act = w.activity
+        if gen != w.seg_gen or act is None or act[0] != "compute":
+            return
+        w.activity = None
+        self._levents += w.count
+        act[1]()                                 # cont
 
     # -- invocation lifecycle ------------------------------------------------
     def _begin_invocation(self, w: _WorkerState, overhead: float,
                           cont: Callable, resumed: bool):
-        rec = InvocationRecord(worker_id=w.wid, start=self.now,
-                               cold_start_s=self.init_s, resumed=resumed)
-        self.platform.invocations.append(rec)
-        w.inv_rec = rec
+        t = self.now
+        recs = []
+        for wid in w.members:
+            rec = InvocationRecord(worker_id=wid, start=t,
+                                   cold_start_s=self.init_s, resumed=resumed)
+            self.platform.invocations.append(rec)
+            recs.append(rec)
+        w.inv_recs = recs
         w.inv_count += 1
         w.inv_gen += 1
         w.inv_cont = cont
         self._tr(w, "invoke" if not resumed else "re-invoke")
+        self.domain.at2(t + overhead, self._invoke_armed, (w, w.inv_gen))
 
-        def armed(gen=w.inv_gen):
-            if gen != w.inv_gen:
-                return                           # killed during init window
-            # the usable window opens once init/restore completes
-            w.inv_cont = None
-            w.cap_gen += 1
-            self._at(self.now + self.usable_s,
-                     lambda gen=w.cap_gen: self._cap_fire(w, gen))
-            cont()
-
-        self._at(self.now + overhead, armed)
+    def _invoke_armed(self, payload):
+        w, gen = payload
+        if gen != w.inv_gen:
+            return                               # killed during init window
+        # the usable window opens once init/restore completes
+        cont, w.inv_cont = w.inv_cont, None
+        w.cap_gen += 1
+        self.domain.at2(self.now + self.usable_s, self._cap_fire,
+                        (w, w.cap_gen))
+        self._levents += w.count
+        cont()
 
     def _close_invocation(self, w: _WorkerState):
-        rec = w.inv_rec
-        mem = self.mem[w.wid]
-        recs = self.platform.finish(rec, mem, self.now)
-        for r in recs:
-            self._gb_seconds += mem / 1024.0 * (r.end - r.start)
-            self._requests += 1
-        w.inv_rec = None
+        now = self.now
+        for rec in w.inv_recs:
+            mem = self.mem[rec.worker_id]
+            for r in self.platform.finish(rec, mem, now):
+                self._gb_seconds += mem / 1024.0 * (r.end - r.start)
+                self._requests += 1
+        w.inv_recs = []
         w.inv_gen += 1                           # stale any init-window event
         w.cap_gen += 1                           # disarm the cap timer
 
@@ -706,7 +974,7 @@ class EventEngine:
         tr.token += 1                            # cancel pending setup
         link = tr.link
         if tr.fid in link.flows:                 # mid-flow
-            del link.flows[tr.fid]
+            link.remove_flow(tr)                 # materializes remaining_gb
             self._reschedule(link)
             tr.latency_left = 0.0
         else:
@@ -748,28 +1016,31 @@ class EventEngine:
         w.activity = ("transfer", tr, tr.cb)
         self._reattach_transfer(w, tr)
 
-    def _cap_fire(self, w: _WorkerState, gen: int):
+    def _pipe_seg_done(self, payload):
+        pr, gen = payload
+        pr._seg_done(gen)
+
+    def _cap_fire(self, payload):
+        w, gen = payload
         if gen != w.cap_gen or w.finished or w.restarting:
             return
-        self._cap_restarts += 1
+        self._cap_restarts += w.count
         self._tr(w, "cap-restart")
         self._pause_activity(w)
         self._close_invocation(w)
         # checkpoint out through the object store, restore on re-invoke
-        self.object_store.put(self._ckpt_key(w), {"iter": w.it},
-                              nbytes=self.ckpt_bytes)
+        self._ckpt_put(w)
         self._restart(w)
 
     def _fail(self, w: _WorkerState, retry: Callable):
-        self._failures += 1
+        self._failures += w.count
         self._tr(w, "fail")
         w.activity = None
         w.seg_gen += 1
         self._close_invocation(w)
         # the dead function checkpointed nothing; the restart restores the
         # last iteration-boundary state (kept in the object store)
-        self.object_store.put(self._ckpt_key(w), {"iter": w.it},
-                              nbytes=self.ckpt_bytes)
+        self._ckpt_put(w)
         w.pending = retry
         self._restart(w)
 
@@ -777,8 +1048,7 @@ class EventEngine:
         w.restarting = True
 
         def resume():
-            if self._ckpt_key(w) in self.object_store.blobs:
-                self.object_store.get(self._ckpt_key(w), nbytes=self.ckpt_bytes)
+            self._ckpt_restore(w)
             w.restarting = False
             pending, w.pending = w.pending, None
             if callable(pending):
@@ -796,16 +1066,17 @@ class EventEngine:
     def _shock_fire(self):
         """One shared shock: every eligible in-flight worker of the target
         tier dies with probability ``kill_frac`` — a correlated burst, not
-        n independent coin flips spread over iterations."""
-        if self._stopping or all(w.finished for w in self._workers):
+        n independent coin flips spread over iterations. The fleet's kill
+        coins are one vectorized draw per shock."""
+        if self._stopping or self._unfinished == 0:
             return                               # epoch over: stop the process
+        us = self._shock_rng.random_sample(self.n)
         killed = 0
-        for w in self._workers:
+        for w in self._workers:      # singleton cohorts (shocks ⇒ uncoalesced)
             tier = self.fleet.workers[w.wid].tier
             if self.shocks.tier is not None and tier != self.shocks.tier:
                 continue
-            u = float(self._shock_rng.random_sample())
-            if u < self.shocks.kill_frac and self._shock_kill(w):
+            if us[w.wid] < self.shocks.kill_frac and self._shock_kill(w):
                 killed += 1
         if killed:
             self._shock_events += 1
@@ -817,7 +1088,7 @@ class EventEngine:
         boundary, a partial transfer re-sends from byte 0."""
         if w.finished or w.restarting:
             return False                         # nothing running to kill
-        self._failures += 1
+        self._failures += w.count
         self._tr(w, "shock-fail")
         act = w.activity
         w.activity = None
@@ -841,8 +1112,7 @@ class EventEngine:
             tr.latency_left = tr.setup_latency_s
             w.pending = lambda: self._resume_transfer(w, tr)
         self._close_invocation(w)
-        self.object_store.put(self._ckpt_key(w), {"iter": w.it},
-                              nbytes=self.ckpt_bytes)
+        self._ckpt_put(w)
         self._restart(w)
         return True
 
@@ -853,7 +1123,7 @@ class EventEngine:
             # the in-flight iteration is discarded, nobody else will arrive
             return self._finish_worker(w)
         b = self._barriers.setdefault(key, {"count": 0, "waiters": []})
-        b["count"] += 1
+        b["count"] += w.count
         w.activity = None
         if b["count"] >= self.n:
             del self._barriers[key]
@@ -873,8 +1143,7 @@ class EventEngine:
     def _gate_ok(self, w: _WorkerState) -> bool:
         if self.mode == "async" or self.staleness is None:
             return True
-        lo = min(ww.it for ww in self._workers)
-        return w.it - lo <= self.staleness
+        return w.it - self._min_it <= self.staleness
 
     def _poke_gate(self):
         if not self._gate_waiters:
@@ -909,20 +1178,22 @@ class EventEngine:
         self._compute_phase(w)
 
     def _compute_phase(self, w: _WorkerState):
-        z = float(w.rng.standard_normal())
-        factor = math.exp(self.sigma * z - 0.5 * self.sigma * self.sigma)
+        k = w.draws
+        w.draws = k + 1
+        factor = self._draws.factor(w.wid, k)
         if (self.slowdown_at_iter is not None
                 and w.it >= self.slowdown_at_iter):
             factor *= self.slowdown_factor
         d = self.base_compute_s[w.wid] * factor
-        fail_u = float(w.rng.random_sample())
-        if fail_u < self.failure_rate:
-            frac = float(w.rng.random_sample())
-            self._do_compute(w, d * frac,
-                             lambda: self._fail(
-                                 w, lambda: self._compute_phase(w)))
-            return
-        self._tr(w, f"compute it{w.it}")
+        if self.failure_rate > 0.0:
+            failed, frac = self._draws.failed(w.wid, k)
+            if failed:
+                self._do_compute(w, d * frac,
+                                 lambda: self._fail(
+                                     w, lambda: self._compute_phase(w)))
+                return
+        if self.trace_enabled:
+            self._tr(w, f"compute it{w.it}")
         if self._ov_count:
             # pipelined plan: compute and the overlappable uploads run
             # as two concurrent lanes inside one window
@@ -985,9 +1256,20 @@ class EventEngine:
                              is_sync=(ph.store == "param"))
 
     def _iteration_done(self, w: _WorkerState):
-        w.it += 1
-        self._tr(w, f"step it{w.it - 1}")
-        lo = min(ww.it for ww in self._workers)
+        it0 = w.it
+        w.it = it0 + 1
+        if self.trace_enabled:
+            self._tr(w, f"step it{it0}")
+        self._levents += w.count
+        hist = self._it_hist
+        hist[it0] -= w.count
+        hist[it0 + 1] += w.count
+        if it0 == self._min_it and hist[it0] == 0:
+            m = it0
+            while m < self.iters and hist[m] == 0:
+                m += 1
+            self._min_it = m
+        lo = self._min_it
         while self._g_done < lo:
             self._g_done += 1
             prev = self._iter_times[-1] if self._iter_times else None
@@ -1014,11 +1296,12 @@ class EventEngine:
             return
         w.finished = True
         if self._stopping:
-            self.object_store.put(self._ckpt_key(w), {"iter": w.it},
-                                  nbytes=self.ckpt_bytes)
+            self._ckpt_put(w)
         self._close_invocation(w)
         self._tr(w, "finish")
-        if all(ww.finished for ww in self._workers):
+        self._levents += w.count
+        self._unfinished -= w.count
+        if self._unfinished == 0:
             self._wall = self.now    # stale timer events may pop later
             if self.on_complete is not None:
                 self.on_complete(self)
@@ -1035,7 +1318,8 @@ class EventEngine:
             self._schedule_next_shock()
 
     def _check_complete(self):
-        unfinished = [w.wid for w in self._workers if not w.finished]
+        unfinished = [wid for w in self._workers if not w.finished
+                      for wid in w.members]
         if unfinished:
             raise RuntimeError(f"event engine deadlock: workers {unfinished} "
                                f"never finished (mode={self.mode})")
@@ -1074,5 +1358,6 @@ class EventEngine:
             restarts=self._cap_restarts,
             failures=self._failures, invocations=self._requests,
             iter_times=self._iter_times, stopped_early=self._stopping,
-            trace=self._trace, shock_events=self._shock_events)
+            trace=self._trace, shock_events=self._shock_events,
+            sim_events=self._levents)
         return self._result

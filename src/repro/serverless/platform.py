@@ -208,7 +208,10 @@ class ServerlessPlatform:
         self.cold_start_base_s = cold_start_base_s
         self.cold_start_per_code_gb_s = cold_start_per_code_gb_s
         self.failure_rate = failure_rate
-        self.rng = np.random.RandomState(seed)
+        # deferred import: repro.core's package init reaches back into
+        # this leaf module, so a top-level import would cycle
+        from repro.core.rng import base_stream
+        self.rng = base_stream(seed)
         self.ledger = BillingLedger()
         self.invocations: List[InvocationRecord] = []
         self.now = 0.0

@@ -14,7 +14,8 @@ path (real JAX workers) uses the same interfaces as the analytic simulator.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+import heapq
+from typing import Any, Dict, List, Optional, Tuple
 
 # Pricing (us-east-1, 2022)
 S3_PUT_PER_1K = 0.005
@@ -64,48 +65,196 @@ class SharedLink:
         self.last_t = 0.0
         self._rates_key = None               # (generation, len) of the cache
         self._rates: Dict[int, float] = {}
+        # incremental uniform-cap fast path (see add_flow): while every
+        # flow has the same cap, all flows drain at one shared per-member
+        # rate, so the link tracks a single virtual-work integral
+        # ``_served`` (GB delivered per member stream) instead of touching
+        # every flow on every clock advance. A flow added at served-level
+        # S with R GB left drains when ``_served`` reaches its target
+        # S + R; targets live in a lazy-deletion heap, making progress()
+        # O(1) and next_completion_dt()/take_drained() O(log n).
+        self._served = 0.0
+        self._uniform_r = 0.0                # shared per-member rate
+        self._target: Dict[int, float] = {}  # fid -> drain served-level
+        self._theap: List[Tuple[float, int]] = []
+        self._cap_counts: Dict[float, int] = {}
+        self._total_w = 0
 
     def _cap(self, tr: Any) -> float:
         return getattr(tr, "cap_gbps", None) or self.per_stream_gbps
 
+    def _tracked(self) -> bool:
+        """True while every current flow was added via ``add_flow`` and
+        caps are uniform — the O(1)/O(log n) accounting is valid. Flows
+        injected directly into ``flows`` (tests, external tools) simply
+        fall back to the materialized per-flow path."""
+        return len(self._target) == len(self.flows) > 0
+
+    # -- incremental flow-set maintenance (engine fast path) -----------------
+    def add_flow(self, tr: Any):
+        """Register a flow, keeping the uniform-mode accounting current.
+        ``tr.remaining_gb`` must be up to date (it is captured into the
+        drain target here)."""
+        cap = self._cap(tr)
+        was_uniform = self._tracked() or not self.flows
+        self.flows[tr.fid] = tr
+        self._cap_counts[cap] = self._cap_counts.get(cap, 0) + 1
+        self._total_w += getattr(tr, "weight", 1)
+        if len(self._cap_counts) == 1:
+            if was_uniform:
+                tgt = self._served + tr.remaining_gb
+                self._target[tr.fid] = tgt
+                heapq.heappush(self._theap, (tgt, tr.fid))
+            else:
+                self._enter_uniform()
+            self._uniform_r = min(cap, self.aggregate_gbps / self._total_w)
+        elif self._target:
+            self._materialize_all()
+
+    def remove_flow(self, tr: Any):
+        """Drop a flow, materializing its ``remaining_gb`` first (pause /
+        checkpoint paths read it)."""
+        fid = tr.fid
+        tgt = self._target.pop(fid, None)
+        if tgt is not None:
+            tr.remaining_gb = max(tgt - self._served, 0.0)
+        del self.flows[fid]
+        cap = self._cap(tr)
+        c = self._cap_counts.get(cap, 0) - 1
+        if c > 0:
+            self._cap_counts[cap] = c
+        elif cap in self._cap_counts:
+            del self._cap_counts[cap]
+        self._total_w -= getattr(tr, "weight", 1)
+        if not self.flows:
+            self._target.clear()
+            self._theap.clear()
+            self._uniform_r = 0.0
+        elif len(self._cap_counts) == 1:
+            if not self._target:
+                self._enter_uniform()
+            cap0 = next(iter(self._cap_counts))
+            self._uniform_r = min(cap0, self.aggregate_gbps / self._total_w)
+
+    def take_drained(self, eps_gb: float = 1e-12) -> List[Any]:
+        """Pop and return every flow whose remainder is within ``eps_gb``
+        of drained (``remaining_gb`` is zeroed/materialized). O(k log n)
+        in uniform mode, O(n) otherwise."""
+        out: List[Any] = []
+        if self._tracked():
+            heap, target = self._theap, self._target
+            while heap:
+                tgt, fid = heap[0]
+                if target.get(fid) != tgt:
+                    heapq.heappop(heap)          # stale (removed/re-added)
+                    continue
+                if tgt - self._served > eps_gb:
+                    break
+                out.append(self.flows[fid])
+                self.remove_flow(self.flows[fid])
+        else:
+            out = [tr for tr in self.flows.values()
+                   if tr.remaining_gb <= eps_gb]
+            for tr in out:
+                self.remove_flow(tr)
+        return out
+
+    def _enter_uniform(self):
+        """Caps just became uniform: snapshot every flow's (materialized)
+        remainder into a drain target."""
+        self._target.clear()
+        heap = []
+        served = self._served
+        for fid, tr in self.flows.items():
+            tgt = served + tr.remaining_gb
+            self._target[fid] = tgt
+            heap.append((tgt, fid))
+        heapq.heapify(heap)
+        self._theap = heap
+
+    def _materialize_all(self):
+        """Caps diverged: flush virtual-work progress into every flow's
+        ``remaining_gb`` and fall back to per-flow accounting."""
+        served = self._served
+        for fid, tr in self.flows.items():
+            tgt = self._target.get(fid)
+            if tgt is not None:
+                tr.remaining_gb = max(tgt - served, 0.0)
+        self._target.clear()
+        self._theap.clear()
+
     def rates(self) -> Dict[int, float]:
         """Max-min fair (water-filling) rate per flow id. Visiting flows
-        narrowest-cap first, each takes ``min(cap, remaining / flows
+        narrowest-cap first, each takes ``min(cap, remaining / members
         left)`` — a capped flow's unused equal share waterfalls to the
         wider flows behind it. Rates only change when the flow set does
         (every mutation bumps ``generation``), so the allocation is
-        cached per (generation, flow count)."""
+        cached per (generation, flow count).
+
+        A flow may carry ``weight`` member streams (a coalesced worker
+        cohort): it counts as ``weight`` equal claimants on the link and
+        its returned rate is the **per-member** rate — exactly the
+        allocation ``weight`` identical singleton flows would get."""
         key = (self.generation, len(self.flows))
         if key == self._rates_key:
             return self._rates
-        order = sorted(self.flows.values(), key=lambda tr: (self._cap(tr),
-                                                            tr.fid))
-        out: Dict[int, float] = {}
-        remaining = self.aggregate_gbps
-        left = len(order)
-        for tr in order:
-            r = min(self._cap(tr), remaining / left)
-            out[tr.fid] = r
-            remaining -= r
-            left -= 1
+        if self._tracked():
+            r = self._uniform_r
+            out = dict.fromkeys(self.flows, r)
+            self._rates_key, self._rates = key, out
+            return out
+        flows = list(self.flows.values())
+        default_cap = self.per_stream_gbps
+        caps = [getattr(tr, "cap_gbps", None) or default_cap for tr in flows]
+        wgts = [getattr(tr, "weight", 1) for tr in flows]
+        left = sum(wgts)
+        cap0 = caps[0]
+        if all(c == cap0 for c in caps):
+            # uniform caps (the homogeneous-fleet common case): water-filling
+            # degenerates to classic processor sharing — either every flow is
+            # cap-bound or every flow takes an equal share; no sort needed
+            r = min(cap0, self.aggregate_gbps / left)
+            out = {tr.fid: r for tr in flows}
+        else:
+            order = sorted(range(len(flows)),
+                           key=lambda i: (caps[i], flows[i].fid))
+            out = {}
+            remaining = self.aggregate_gbps
+            for i in order:
+                wgt = wgts[i]
+                r = min(caps[i], remaining / left)
+                out[flows[i].fid] = r
+                remaining -= r * wgt
+                left -= wgt
         self._rates_key, self._rates = key, out
         return out
 
     def next_completion_dt(self) -> float:
-        """Time until the first flow drains at the current per-flow rates."""
+        """Time until the first flow drains at the current per-flow rates.
+        (``remaining_gb`` is per member, as is the rate.)"""
+        if self._tracked():
+            heap, target = self._theap, self._target
+            while heap and target.get(heap[0][1]) != heap[0][0]:
+                heapq.heappop(heap)              # lazy-deleted entries
+            return max(heap[0][0] - self._served, 0.0) / self._uniform_r
         rates = self.rates()
         return min(tr.remaining_gb / rates[tr.fid]
                    for tr in self.flows.values())
 
     def progress(self, now: float):
         """Advance all flows to ``now`` at the rates that held since the
-        last flow-set change (rates only change when the set changes)."""
+        last flow-set change (rates only change when the set does). In
+        uniform mode only the shared virtual-work integral advances —
+        O(1) regardless of flow count."""
         dt = now - self.last_t
         if dt > 0 and self.flows:
-            rates = self.rates()
-            for tr in self.flows.values():
-                tr.remaining_gb = max(tr.remaining_gb - rates[tr.fid] * dt,
-                                      0.0)
+            if self._tracked():
+                self._served += self._uniform_r * dt
+            else:
+                rates = self.rates()
+                for tr in self.flows.values():
+                    tr.remaining_gb = max(
+                        tr.remaining_gb - rates[tr.fid] * dt, 0.0)
         self.last_t = now
 
 

@@ -22,7 +22,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.bayes_opt import Config, ConfigSpace
 from repro.core.constraints import Goal
-from repro.core.cost_model import epoch_estimate, profile_cost
+from repro.core.probe_cache import DEFAULT_CACHE
 from repro.serverless.stores import ObjectStore, ParamStore
 from repro.workflow.dag import TaskSpec, WorkflowDAG
 
@@ -94,7 +94,7 @@ class BudgetAllocator:
         n_probe = self._grid[len(self._grid) // 2]
         self._probe_usd: Dict[str, float] = {}
         for t in dag:
-            _, usd, _ = profile_cost(
+            _, usd, _ = DEFAULT_CACHE.profile_cost(
                 t.workload, scheme, Config(n_probe, mem_probe),
                 t.batch_size, param_store, object_store, profile_iters)
             self._probe_usd[t.name] = usd * bo_max_iters
@@ -118,7 +118,7 @@ class BudgetAllocator:
                object_store: ObjectStore) -> List[Tuple[int, float, float]]:
         out = []
         for n in self._grid:
-            est = epoch_estimate(t.workload, self.scheme,
+            est = DEFAULT_CACHE.epoch_estimate(t.workload, self.scheme,
                                  Config(n, self.memory_mb), t.batch_size,
                                  param_store, object_store,
                                  samples=t.samples)

@@ -80,7 +80,8 @@ class WorkflowOrchestrator:
                  sweeps: Sequence[HPOSweep] = (), seed: int = 0,
                  allocator: Optional[BudgetAllocator] = None,
                  profile_iters: int = 1, bo_max_iters: int = 8,
-                 mid_epoch_adapt: bool = False):
+                 mid_epoch_adapt: bool = False,
+                 record_trace: bool = False):
         self.dag = dag
         self.goal = goal
         self.platform = platform
@@ -90,6 +91,10 @@ class WorkflowOrchestrator:
         self.scheme = scheme
         self.engine = engine
         self.engine_opts = dict(engine_opts or {})
+        # perf default: a workflow co-simulates many engines — per-event
+        # trace lines are for debugging single tasks, so they are opt-in
+        if record_trace and "record_trace" not in self.engine_opts:
+            self.engine_opts["record_trace"] = True
         self.seed = seed
         self.profile_iters = profile_iters
         self.bo_max_iters = bo_max_iters

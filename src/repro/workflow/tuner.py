@@ -25,6 +25,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.bayes_opt import Config
+from repro.core.rng import curve_stream
 from repro.serverless.worker import Workload
 from repro.workflow.dag import TaskSpec
 
@@ -104,7 +105,7 @@ def trial_curves(sweep: HPOSweep) -> Tuple[np.ndarray, np.ndarray]:
     ``floor[i] + quality[i] / (1 + e)``. Shared by ``SuccessiveHalving``
     and by baselines (e.g. uniform-budget HPO) that must be judged on the
     *same* trials."""
-    rng = np.random.RandomState(sweep.seed * 9176 + 13)
+    rng = curve_stream(sweep.seed)
     quality = rng.uniform(0.2, 1.0, size=sweep.n_trials)
     floor = rng.uniform(0.01, 0.05, size=sweep.n_trials)
     return quality, floor

@@ -62,7 +62,7 @@ def _build(scheme, n, mem, sigma, failure_rate, sync_mode, hetero, shocked,
     return eng, plat
 
 
-def _check_invariants(eng, plat, r):
+def _check_invariants(eng, plat, r, samples=SAMPLES, batch=BATCH):
     n = eng.n
     # (1) trace timestamps never go backwards
     times = [float(line.split()[0]) for line in r.trace]
@@ -79,7 +79,7 @@ def _check_invariants(eng, plat, r):
         rel=1e-9)
     ps = eng.param_store
     hourly = ps.vcpus * ECS_VCPU_HOUR + ps.memory_gb * ECS_GB_HOUR
-    n_objects = max(math.ceil(W.sample_bytes * SAMPLES / DATA_OBJECT_BYTES), 1)
+    n_objects = max(math.ceil(W.sample_bytes * samples / DATA_OBJECT_BYTES), 1)
     assert r.store_usd == pytest.approx(
         r.store_billed_s / 3600.0 * hourly
         + n_objects * S3_GET_PER_1K / 1000.0 * n, rel=1e-9)
@@ -90,7 +90,7 @@ def _check_invariants(eng, plat, r):
     assert r.cost_usd == r.lambda_usd + r.store_usd
 
     # (4) every started iteration completes, and the whole epoch ran
-    iters = max(math.ceil(SAMPLES / BATCH), 1)
+    iters = max(math.ceil(samples / batch), 1)
     assert not r.stopped_early
     assert r.iters_done == iters
     stepped = {}

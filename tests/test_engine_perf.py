@@ -1,0 +1,222 @@
+"""The throughput overhaul's correctness surface.
+
+The engine rebuild (calendar-queue dispatch, coalesced homogeneous
+cohorts, vectorized draws, incremental ``SharedLink`` accounting, probe
+cache) must be invisible to everything above it:
+
+  - the calendar queue pops in exactly ``(t, seq)`` order for arbitrary
+    push/pop interleavings at any timescale;
+  - a coalesced run equals a ``coalesce=False`` per-worker run of the
+    same config — wall, cost, invocations, per-iteration times;
+  - a 2048-worker fleet simulates in seconds (the scale smoke test) and
+    still satisfies every engine invariant;
+  - the probe cache returns exactly what the uncached closed forms
+    return, and actually hits;
+  - the named RNG streams are deterministic, independent, and preserve
+    the legacy seed formulas the engine/trace tests pin;
+  - ``record_trace=False`` changes the trace only (wall/cost identical).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Config
+from repro.core.cost_model import epoch_estimate
+from repro.core.probe_cache import DEFAULT_CACHE, ProbeCache
+from repro.core.rng import (base_stream, curve_stream, shock_stream,
+                            stream, stream_seed, worker_stream)
+from repro.serverless import (WORKLOADS, EventEngine, FleetSpec, ObjectStore,
+                              ParamStore, ServerlessPlatform)
+from repro.serverless.events import CalendarQueue
+
+from test_engine_invariants import _check_invariants
+
+W = WORKLOADS["resnet18"]
+
+
+# -- calendar queue -----------------------------------------------------------
+
+def test_calendar_queue_pops_in_total_order():
+    rng = np.random.RandomState(7)
+    q = CalendarQueue()
+    pushed = []
+    seq = 0
+    popped = []
+    # interleave pushes and pops; times span 9 orders of magnitude and
+    # include duplicates, so bucket resizing and same-bucket ordering both
+    # get exercised
+    for _ in range(3000):
+        if pushed and rng.random_sample() < 0.4:
+            popped.append(q.pop())
+            pushed.sort()
+            assert popped[-1] == pushed.pop(0)
+        else:
+            scale = 10.0 ** rng.randint(-3, 6)
+            t = float(rng.random_sample() * scale)
+            if pushed and rng.random_sample() < 0.1:
+                t = pushed[-1][0]                    # duplicate timestamp
+            ev = (t, seq, None, None)
+            seq += 1
+            q.push(ev)
+            pushed.append(ev)
+    # drain: the remainder must come out exactly in (t, seq) sorted order
+    pushed.sort()
+    drained = []
+    while q:
+        drained.append(q.pop())
+    assert drained == pushed
+
+
+def test_calendar_queue_monotone_time_pattern():
+    # the engine's actual access pattern: pops interleaved with pushes of
+    # near-future events
+    q = CalendarQueue()
+    q.push((0.0, 0, None, None))
+    t, n = 0.0, 1
+    last = (-1.0, -1)
+    for _ in range(5000):
+        ev = q.pop()
+        assert ev[:2] >= last, "queue went backwards"
+        last = ev[:2]
+        t = ev[0]
+        if n < 5000:
+            q.push((t + 0.37, n, None, None))
+            n += 1
+    assert len(q) == 0
+
+
+# -- coalesced cohorts --------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["hier", "ps", "scatter_reduce"])
+def test_coalesced_equals_per_worker(scheme):
+    def run(coalesce):
+        plat = ServerlessPlatform(seed=0)
+        return EventEngine(W, scheme, 32, 2048, 16_384, ParamStore(),
+                           ObjectStore(), samples=32_768, seed=3,
+                           platform=plat, coalesce=coalesce).run()
+    a, b = run(None), run(False)
+    assert a.wall_s == pytest.approx(b.wall_s, rel=1e-9)
+    assert a.lambda_usd == pytest.approx(b.lambda_usd, rel=1e-9)
+    assert a.store_usd == pytest.approx(b.store_usd, rel=1e-9)
+    assert a.invocations == b.invocations
+    assert a.iters_done == b.iters_done
+    assert a.iter_times == pytest.approx(b.iter_times, rel=1e-9)
+
+
+def test_coalesce_refused_when_ineligible():
+    with pytest.raises(ValueError):
+        EventEngine(W, "hier", 4, 2048, 2048, ParamStore(), ObjectStore(),
+                    samples=4096, straggler_sigma=0.3, coalesce=True)
+
+
+def test_large_fleet_smoke_is_fast_and_invariant():
+    """2048 homogeneous bsp workers, 2 epochs — the scale the overhaul
+    exists for. Must finish in seconds, not minutes, and keep every
+    engine invariant."""
+    n, gb = 2048, 2048 * 512
+    plat = ServerlessPlatform(seed=0)
+    eng = EventEngine(W, "hier", n, 2048, gb, ParamStore(), ObjectStore(),
+                      samples=2 * gb, seed=11, platform=plat)
+    t0 = time.perf_counter()
+    r = eng.run()
+    wall = time.perf_counter() - t0
+    assert eng.coalesced
+    assert wall < 60.0, f"2048-worker 2-epoch run took {wall:.1f}s"
+    assert r.iters_done == 2
+    _check_invariants(eng, plat, r, samples=2 * gb, batch=gb)
+
+
+# -- probe cache --------------------------------------------------------------
+
+def _probe_args():
+    return dict(w=W, scheme="hier", config=Config(8, 2048),
+                global_batch=4096, param_store=ParamStore(),
+                object_store=ObjectStore())
+
+
+def test_probe_cache_hits_and_matches_uncached():
+    cache = ProbeCache()
+    kw = _probe_args()
+    raw = epoch_estimate(kw["w"], kw["scheme"], kw["config"],
+                         kw["global_batch"], kw["param_store"],
+                         kw["object_store"])
+    first = cache.epoch_estimate(**kw)
+    assert cache.misses == 1 and cache.hits == 0
+    second = cache.epoch_estimate(**kw)
+    assert cache.misses == 1 and cache.hits == 1
+    for est in (first, second):
+        assert est.wall_s == raw.wall_s
+        assert est.cost_usd == raw.cost_usd
+        assert est.it_breakdown == raw.it_breakdown
+    # cached results are defensive copies, not shared mutables
+    first.it_breakdown["poison"] = 1.0
+    assert "poison" not in cache.epoch_estimate(**kw).it_breakdown
+
+
+def test_probe_cache_distinguishes_configs_and_fleets():
+    cache = ProbeCache()
+    kw = _probe_args()
+    cache.epoch_estimate(**kw)
+    kw2 = dict(kw, config=Config(16, 2048))
+    cache.epoch_estimate(**kw2)
+    assert cache.misses == 2
+    kw3 = dict(kw, fleet=FleetSpec.homogeneous(8, 2048))
+    cache.epoch_estimate(**kw3)
+    assert cache.misses == 3
+    assert len(cache) == 3
+
+
+def test_scheduler_uses_probe_cache():
+    from repro.core import ConfigSpace, EpochPlan, Goal, TaskScheduler
+    DEFAULT_CACHE.clear()
+    plat = ServerlessPlatform(seed=0)
+    sched = TaskScheduler(plat, ObjectStore(), ParamStore(),
+                          space=ConfigSpace(max_workers=32), seed=0)
+    sched.run([EpochPlan(batch_size=512, workload=W, samples=2048)],
+              Goal("min_cost"))
+    assert DEFAULT_CACHE.hits + DEFAULT_CACHE.misses > 0
+
+
+# -- rng streams --------------------------------------------------------------
+
+def test_stream_seed_deterministic_and_independent():
+    a = stream_seed(42, "straggler", 0)
+    assert a == stream_seed(42, "straggler", 0)
+    others = {stream_seed(42, "straggler", 1), stream_seed(42, "failure", 0),
+              stream_seed(43, "straggler", 0)}
+    assert a not in others and len(others) == 3
+    assert 0 <= a < 2 ** 31
+    x = stream(42, "straggler", 0).random_sample(4)
+    y = stream(42, "straggler", 0).random_sample(4)
+    assert (x == y).all()
+
+
+def test_legacy_seed_formulas_preserved():
+    # the engine/trace tests pin traces produced by these exact formulas
+    assert (worker_stream(5, 3, job_idx=2).random_sample()
+            == np.random.RandomState(
+                (5 * 1_000_003 + 3 + 611_953 * 2) % 2 ** 31).random_sample())
+    assert (shock_stream(5, job_idx=1).random_sample()
+            == np.random.RandomState(
+                (5 * 2_147_483_029 + 97 + 1) % 2 ** 31).random_sample())
+    assert (curve_stream(9).random_sample()
+            == np.random.RandomState(9 * 9176 + 13).random_sample())
+    assert (base_stream(7).random_sample()
+            == np.random.RandomState(7).random_sample())
+
+
+# -- record_trace=False -------------------------------------------------------
+
+def test_record_trace_off_changes_only_the_trace():
+    def run(**kw):
+        return EventEngine(W, "hier", 8, 2048, 4096, ParamStore(),
+                           ObjectStore(), samples=8192,
+                           straggler_sigma=0.2, seed=5, **kw).run()
+    on, off = run(), run(record_trace=False)
+    assert off.trace == []
+    assert on.trace
+    assert off.wall_s == on.wall_s
+    assert off.lambda_usd == on.lambda_usd
+    assert off.store_usd == on.store_usd
+    assert off.sim_events == on.sim_events
