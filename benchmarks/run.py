@@ -25,8 +25,8 @@ from benchmarks import (async_staleness, comm_breakdown, comm_scaling,
                         dynamic_batching, hetero_fleet, kernels_bench,
                         multi_job, nas_adaptation, online_learning,
                         optimizer_compare, overlap_pipeline, roofline,
-                        scenarios, serving_slo, shard_ablation,
-                        straggler_tail, workflow_hpo)
+                        scenarios, serving_contention, serving_slo,
+                        shard_ablation, straggler_tail, workflow_hpo)
 
 BENCHES = {
     "fig1_2_8_comm_scaling": comm_scaling,
@@ -41,6 +41,7 @@ BENCHES = {
     "fig13_nas": nas_adaptation,
     "footnote4_shard_ablation": shard_ablation,
     "serving_slo_batching": serving_slo,
+    "serving_contention": serving_contention,
     "event_straggler_tail": straggler_tail,
     "event_async_staleness": async_staleness,
     "event_hetero_fleet": hetero_fleet,
@@ -56,7 +57,8 @@ BENCHES = {
 # uniform HPO under one deadline+budget) with reduced rung samples
 QUICK = ["fig7_comm_breakdown", "comm_strategies", "overlap_pipeline",
          "event_straggler_tail", "event_async_staleness",
-         "event_hetero_fleet", "event_multi_job", "workflow_hpo"]
+         "event_hetero_fleet", "event_multi_job", "serving_contention",
+         "workflow_hpo"]
 
 
 def _run_mod(mod, quick: bool):

@@ -1,5 +1,7 @@
+from repro.serverless.arrivals import (  # noqa: F401
+    ArrivalSpec, RequestStream, ServingTask)
 from repro.serverless.events import (  # noqa: F401
-    ContentionDomain, EngineResult, EventEngine)
+    ContentionDomain, EngineResult, EventEngine, ServingJob, ServingResult)
 from repro.serverless.platform import (  # noqa: F401
     BillingLedger, FleetSpec, ServerlessPlatform, ShockModel, WorkerSpec,
     fleet_from_config)

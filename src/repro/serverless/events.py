@@ -214,11 +214,12 @@ class _Transfer:
 
     __slots__ = ("fid", "link", "remaining_gb", "total_gb", "latency_left",
                  "setup_latency_s", "cb", "token", "is_sync", "cap_gbps",
-                 "weight")
+                 "weight", "prio")
 
     def __init__(self, link: SharedLink, nbytes: float, latency_s: float,
                  cb: Callable[[], None], is_sync: bool,
-                 cap_gbps: Optional[float] = None, weight: int = 1):
+                 cap_gbps: Optional[float] = None, weight: int = 1,
+                 prio: float = 1.0):
         self.fid = next(self._ids)
         self.link = link
         self.remaining_gb = nbytes / 1e9
@@ -230,6 +231,7 @@ class _Transfer:
         self.is_sync = is_sync  # gradient sync (param-store keep-alive window)
         self.cap_gbps = cap_gbps
         self.weight = weight
+        self.prio = prio        # water-filling priority (SharedLink.rates)
 
 
 class ContentionDomain:
@@ -1360,4 +1362,481 @@ class EventEngine:
             iter_times=self._iter_times, stopped_early=self._stopping,
             trace=self._trace, shock_events=self._shock_events,
             sim_events=self._levents)
+        return self._result
+
+
+@dataclasses.dataclass
+class ServingResult:
+    """What one event-engine serving job produced."""
+    wall_s: float                # first arrival admitted -> last batch done
+    lambda_usd: float
+    store_usd: float
+    requests: int                # inference requests served
+    batches: int                 # function invocations (one per batch)
+    mean_batch: float
+    p50_s: float
+    p99_s: float
+    slo_s: Optional[float]
+    slo_violations: int          # requests whose latency exceeded slo_s
+    cold_starts: int
+    warm_hits: int               # batches served by a reused instance
+    peak_instances: int
+    sync_s: float                # own param-store fetch-outstanding window
+    store_billed_s: float        # keep-alive share billed (cross-job union)
+    sim_events: int
+
+    @property
+    def cost_usd(self) -> float:
+        return self.lambda_usd + self.store_usd
+
+    @property
+    def cost_per_1k(self) -> float:
+        return (self.cost_usd / self.requests * 1000.0
+                if self.requests else 0.0)
+
+
+class _ServeInstance:
+    """One serverless serving function: a worker state machine of the
+    serving fleet. States: ``cold`` (booting + fetching code/model),
+    ``idle`` (warm, waiting for a batch, expires after keep_warm_s),
+    ``busy`` (executing a batch), ``fetch`` (re-pulling the current model
+    mid-flight — continuous deployment)."""
+
+    __slots__ = ("iid", "state", "busy_until", "spin_t", "last_fetch",
+                 "served", "expiry_gen")
+
+    def __init__(self, iid: int, now: float, ready_est: float):
+        self.iid = iid
+        self.state = "cold"
+        self.busy_until = ready_est  # prediction while cold/fetch, exact busy
+        self.spin_t = now
+        self.last_fetch = now
+        self.served = 0
+        self.expiry_gen = 0
+
+
+class ServingJob:
+    """Inference traffic as a first-class event-engine job.
+
+    An autoscaled serverless serving fleet drains one arrival stream
+    under a :class:`repro.serving.ServePolicy` (same SLO-driven dynamic
+    batching semantics as ``repro.serving.simulate``, which this job
+    reproduces exactly in the single-instance zero-cold-start limit —
+    tested). Each function instance is a worker state machine; admission
+    is cold-start-aware: a queued batch either waits for the earliest
+    busy/cold instance or pays a fresh cold start, whichever is
+    predicted faster.
+
+    Registered into a ``ContentionDomain`` exactly like an
+    ``EventEngine`` (duck-typed engine interface), so serving co-runs
+    with training on one clock: cold starts fetch ``code_bytes`` from
+    the ObjectStore and ``model_bytes`` from the ParamStore over the
+    *shared* links — "serve the current model" genuinely contends with
+    "train the next one" — and the model fetches hold the param store's
+    keep-alive window (billed as this job's share of the cross-job
+    union). With ``refresh_every_s`` set, warm instances re-pull the
+    model at that cadence: continuous deployment serves the current
+    weights, at a steady bandwidth price. ``link_priority`` raises the
+    serving fetches' water-filling priority on the shared links, which
+    bounds how much a training bulk-sync can inflate serving latency.
+
+    Billing mirrors Lambda and lands on the shared platform ledger as it
+    accrues: one request per batch plus GB-seconds of execution (and of
+    model refreshes); the cold-start init window itself is unbilled, but
+    its code fetch pays an S3 GET. ``result()`` attributes this job's
+    total to ``ledger.job_usd[job]``."""
+
+    def __init__(self, policy, arrivals: np.ndarray,
+                 flops_per_request: float, param_store: ParamStore,
+                 object_store: ObjectStore, *,
+                 domain: Optional[ContentionDomain] = None,
+                 platform: Optional[ServerlessPlatform] = None,
+                 model_bytes: float = 0.0, code_bytes: float = 0.0,
+                 cold_start_s: float = 1.0, keep_warm_s: float = 60.0,
+                 max_instances: int = 64,
+                 refresh_every_s: Optional[float] = None,
+                 link_priority: float = 1.0, slo_s: Optional[float] = None,
+                 job: str = "serving", start_at: float = 0.0,
+                 on_complete: Optional[Callable] = None):
+        if max_instances < 1:
+            raise ValueError("max_instances must be >= 1")
+        from repro.serving.batcher import exec_time  # deferred: no cycle
+        self._exec_time = exec_time
+        self.policy = policy
+        self.arrivals = np.asarray(arrivals, dtype=float)
+        if len(self.arrivals) > 1 and np.any(np.diff(self.arrivals) < 0):
+            raise ValueError("arrivals must be sorted")
+        self.flops_per_request = flops_per_request
+        self.param_store = param_store
+        self.object_store = object_store
+        self.platform = platform
+        self.model_bytes = model_bytes
+        self.code_bytes = code_bytes
+        self.cold_start_s = cold_start_s
+        self.keep_warm_s = keep_warm_s
+        self.max_instances = max_instances
+        self.refresh_every_s = refresh_every_s
+        self.link_priority = link_priority
+        self.slo_s = slo_s
+        self.job = job
+        self.start_at = max(start_at, 0.0)
+        self.on_complete = on_complete
+        self.mem_gb = policy.memory_mb / 1024.0
+        self.net_cap = fn_net_gbps(policy.memory_mb) * 8
+        # full-batch execution estimate, used by the admission predictor
+        self._exec_full = exec_time(flops_per_request, policy.max_batch,
+                                    policy.memory_mb)
+        self.domain = domain or ContentionDomain()
+        self._job_idx = self.domain._register(self)
+        self.links: Dict[str, SharedLink] = {
+            "param": self.domain.link_for(param_store, "param"),
+            "object": self.domain.link_for(object_store, "object"),
+        }
+        self.instances: List[_ServeInstance] = []
+        self._iids = itertools.count()
+        self._next = 0           # first unserved request index
+        self._delivered = 0      # requests arrived so far
+        self._timer_idx = -1     # oldest-request index the timer is armed for
+        self._timer_gen = 0
+        self._batch_log: List[Tuple[int, int, float]] = []  # (i, j, done_t)
+        self._gb_seconds = 0.0
+        self._requests = 0       # invocations billed (one per batch)
+        self._cold_starts = 0
+        self._warm_hits = 0
+        self._peak = 0
+        self._levents = 0
+        self._started = False
+        self._done = False
+        self._t0 = 0.0
+        self._wall = 0.0
+        # ContentionDomain engine interface (sync-union accounting)
+        self._sync_active = 0
+        self._sync_busy = 0.0
+        self._result: Optional[ServingResult] = None
+
+    # -- primitives ----------------------------------------------------------
+    @property
+    def now(self) -> float:
+        return self.domain.now
+
+    def _reschedule(self, link: SharedLink):
+        link.generation += 1
+        if not link.flows:
+            return
+        t_next = self.now + link.next_completion_dt()
+        self.domain.at2(t_next, self._link_event, (link, link.generation))
+
+    def _link_event(self, payload):
+        link, gen = payload
+        if gen != link.generation:
+            return
+        done = link.take_drained(_EPS_GB)
+        self._reschedule(link)
+        for tr in done:
+            tr.cb()
+
+    def _transfer(self, store: str, nbytes: float, cont: Callable,
+                  is_sync: bool):
+        """Open one serving-priority flow on a (possibly shared) store
+        link; ``cont`` runs when it drains."""
+        link = self.links[store]
+
+        def finished():
+            if is_sync:
+                self._sync_active -= 1
+            cont()
+
+        cap = self.net_cap if store == "param" else None
+        tr = _Transfer(link, nbytes, link.latency_s, finished, is_sync,
+                       cap_gbps=cap, prio=self.link_priority)
+        if is_sync:
+            self._sync_active += 1
+        if tr.latency_left > 0:
+            link.setup += 1
+            self.domain.at2(self.now + tr.latency_left, self._setup_done,
+                            (tr, tr.token))
+        else:
+            link.add_flow(tr)
+            self._reschedule(link)
+
+    def _setup_done(self, payload):
+        tr, token = payload
+        if token != tr.token:
+            return
+        link = tr.link
+        link.setup -= 1
+        tr.latency_left = 0.0
+        if tr.remaining_gb <= _EPS_GB:
+            self._reschedule(link)
+            tr.cb()
+            return
+        link.add_flow(tr)
+        self._reschedule(link)
+
+    def _bill(self, duration_s: float, request: bool):
+        """Accrue GB-seconds (and optionally one Lambda request) both on
+        this job's counters and — live, so co-running jobs see one shared
+        bill — on the platform ledger."""
+        self._gb_seconds += self.mem_gb * duration_s
+        if request:
+            self._requests += 1
+        if self.platform is not None:
+            led = self.platform.ledger
+            led.gb_seconds += self.mem_gb * duration_s
+            if request:
+                led.requests += 1
+
+    # -- arrival stream ------------------------------------------------------
+    def _start(self):
+        if self._started:
+            return
+        self._started = True
+        self._t0 = self.now
+        if len(self.arrivals) == 0:
+            return self._finish()
+        self.domain.at2(self._t0 + self.arrivals[0], self._arrive, 0)
+
+    def _arrive(self, k: int):
+        self._delivered = k + 1
+        self._levents += 1
+        if k + 1 < len(self.arrivals):
+            self.domain.at2(self._t0 + self.arrivals[k + 1],
+                            self._arrive, k + 1)
+        self._dispatch()
+
+    # -- dynamic batching + admission ----------------------------------------
+    def _dispatch(self):
+        """Launch batches while the policy says go: a batch launches when
+        the queue holds ``max_batch`` requests, the oldest has waited
+        ``timeout_s`` since *arrival*, or the stream is exhausted — the
+        exact (fixed) ``simulate`` semantics, with batch membership
+        decided at launch."""
+        pol = self.policy
+        n = len(self.arrivals)
+        while True:
+            qlen = self._delivered - self._next
+            if qlen == 0:
+                return
+            oldest = self._t0 + self.arrivals[self._next]
+            full = qlen >= pol.max_batch
+            exhausted = self._delivered == n
+            overdue = self.now >= oldest + pol.timeout_s - 1e-12
+            if not (full or overdue or exhausted):
+                self._arm_timer(oldest + pol.timeout_s)
+                return
+            inst = self._acquire()
+            if inst is None:
+                return           # instance-ready/free events re-dispatch
+            take = min(qlen, pol.max_batch)
+            self._launch_batch(inst, self._next, self._next + take)
+            self._next += take
+
+    def _arm_timer(self, deadline: float):
+        if self._timer_idx == self._next:
+            return               # already armed for this oldest request
+        self._timer_idx = self._next
+        self._timer_gen += 1
+        self.domain.at2(deadline, self._timeout_fire, self._timer_gen)
+
+    def _timeout_fire(self, gen: int):
+        if gen != self._timer_gen:
+            return
+        self._timer_idx = -1
+        self._dispatch()
+
+    def _acquire(self) -> Optional[_ServeInstance]:
+        """A warm idle instance if one exists; otherwise the cold-start-
+        aware admission decision: scale out only when a fresh cold start
+        is predicted ready before the current fleet can reach the
+        *backlog* — the earliest instance-free time plus the pending
+        batches already queued ahead, drained fleet-wide (comparing
+        against the earliest free time alone would never scale out: one
+        busy instance always frees before a cold start lands, while the
+        queue grows without bound)."""
+        for inst in self.instances:
+            if inst.state == "idle":
+                return inst
+        if len(self.instances) < self.max_instances:
+            t_cold = self.now + self.cold_start_s + self._fetch_est()
+            m = len(self.instances)
+            if m:
+                pending = -(-(self._delivered - self._next)
+                            // self.policy.max_batch)
+                t_wait = (min(inst.busy_until for inst in self.instances)
+                          + (pending - 1) * self._exec_full / m)
+            else:
+                t_wait = math.inf
+            if t_cold < t_wait:
+                self._spin_up()
+        return None
+
+    def _fetch_est(self) -> float:
+        """Uncontended estimate of the cold-start artifact fetches (the
+        admission policy's prediction — actual fetches ride the shared
+        links and may be slower)."""
+        est = 0.0
+        if self.code_bytes > 0:
+            lnk = self.links["object"]
+            est += lnk.latency_s + self.code_bytes / 1e9 / lnk.per_stream_gbps
+        if self.model_bytes > 0:
+            lnk = self.links["param"]
+            bw = min(self.net_cap, lnk.per_stream_gbps)
+            est += lnk.latency_s + self.model_bytes / 1e9 / bw
+        return est
+
+    # -- instance lifecycle --------------------------------------------------
+    def _spin_up(self):
+        inst = _ServeInstance(next(self._iids), self.now,
+                              self.now + self.cold_start_s
+                              + self._fetch_est())
+        self.instances.append(inst)
+        self._cold_starts += 1
+        self._levents += 1
+        self._peak = max(self._peak, len(self.instances))
+
+        def after_model():
+            inst.last_fetch = self.now
+            self._instance_idle(inst)
+            self._dispatch()
+
+        def after_code():
+            if self.model_bytes > 0:
+                self._transfer("param", self.model_bytes, after_model,
+                               is_sync=True)
+            else:
+                after_model()
+
+        def boot_done():
+            if self.code_bytes > 0:
+                # the GET request itself is billed in result(); the bytes
+                # ride the shared object link here
+                self._transfer("object", self.code_bytes, after_code,
+                               is_sync=False)
+            else:
+                after_code()
+
+        self.domain.at(self.now + self.cold_start_s, boot_done)
+
+    def _instance_idle(self, inst: _ServeInstance):
+        inst.state = "idle"
+        inst.busy_until = self.now
+        inst.expiry_gen += 1
+        if math.isfinite(self.keep_warm_s):
+            self.domain.at2(self.now + self.keep_warm_s, self._expire_fire,
+                            (inst, inst.expiry_gen))
+        self._maybe_finish()
+
+    def _expire_fire(self, payload):
+        inst, gen = payload
+        if gen != inst.expiry_gen or inst.state != "idle":
+            return
+        # keep-warm window elapsed unused: the platform reclaims it
+        # (scale-in; idle time is the provider's cost, not billed)
+        self.instances.remove(inst)
+        self._levents += 1
+
+    def _launch_batch(self, inst: _ServeInstance, i: int, j: int):
+        batch = j - i
+        dt = self._exec_time(self.flops_per_request, batch,
+                             self.policy.memory_mb)
+        if inst.served > 0:
+            self._warm_hits += 1
+        inst.served += 1
+        inst.state = "busy"
+        inst.expiry_gen += 1
+        inst.busy_until = self.now + dt
+        self._bill(dt, request=True)
+        self._levents += batch
+        self.domain.at2(self.now + dt, self._batch_done, (inst, i, j))
+
+    def _batch_done(self, payload):
+        inst, i, j = payload
+        self._batch_log.append((i, j, self.now))
+        if (self.refresh_every_s is not None and self.model_bytes > 0
+                and self.now - inst.last_fetch >= self.refresh_every_s):
+            # continuous deployment: re-pull the current weights before
+            # taking more traffic; the function keeps billing while it
+            # downloads, and the fetch contends on the shared param link
+            inst.state = "fetch"
+            inst.busy_until = self.now + self._fetch_est()
+            t_fetch0 = self.now
+
+            def refreshed():
+                inst.last_fetch = self.now
+                self._bill(self.now - t_fetch0, request=False)
+                self._instance_idle(inst)
+                self._dispatch()
+
+            self._transfer("param", self.model_bytes, refreshed,
+                           is_sync=True)
+        else:
+            self._instance_idle(inst)
+        self._dispatch()
+
+    def _maybe_finish(self):
+        n = len(self.arrivals)
+        if self._done or self._delivered < n or self._next < n:
+            return
+        if any(inst.state in ("busy", "cold", "fetch")
+               for inst in self.instances):
+            return
+        self._finish()
+
+    def _finish(self):
+        self._done = True
+        self._wall = self.now
+        if self.on_complete is not None:
+            self.on_complete(self)
+
+    # -- results -------------------------------------------------------------
+    def _check_complete(self):
+        if not self._done:
+            raise RuntimeError(
+                f"serving job deadlock: {self._delivered - self._next} "
+                f"queued of {len(self.arrivals)} requests never served")
+
+    def run(self) -> ServingResult:
+        """Run this job's domain to completion and return this job's
+        result (prefer ``domain.run()`` + ``job.result()`` when sharing
+        a domain)."""
+        self.domain.run()
+        return self.result()
+
+    def result(self) -> ServingResult:
+        if self._result is not None:
+            return self._result
+        self._check_complete()
+        if self._batch_log:
+            lat = np.concatenate([
+                done - (self._t0 + self.arrivals[i:j])
+                for i, j, done in self._batch_log])
+        else:
+            lat = np.zeros(1)
+        billed_s = self.domain.store_keep_alive_share(self)
+        self.param_store.keep_alive(billed_s)
+        lambda_usd = (self._gb_seconds * LAMBDA_GB_SECOND
+                      + self._requests * LAMBDA_PER_REQUEST)
+        store_hourly = (self.param_store.vcpus * ECS_VCPU_HOUR
+                        + self.param_store.memory_gb * ECS_GB_HOUR)
+        gets = self._cold_starts if self.code_bytes > 0 else 0
+        store_usd = (billed_s / 3600.0 * store_hourly
+                     + gets * S3_GET_PER_1K / 1000.0)
+        requests = sum(j - i for i, j, _ in self._batch_log)
+        batches = len(self._batch_log)
+        violations = (int(np.sum(lat > self.slo_s))
+                      if self.slo_s is not None and requests else 0)
+        self._result = ServingResult(
+            wall_s=max(self._wall - self._t0, 0.0),
+            lambda_usd=lambda_usd, store_usd=store_usd,
+            requests=requests, batches=batches,
+            mean_batch=requests / batches if batches else 0.0,
+            p50_s=float(np.percentile(lat, 50)) if requests else 0.0,
+            p99_s=float(np.percentile(lat, 99)) if requests else 0.0,
+            slo_s=self.slo_s, slo_violations=violations,
+            cold_starts=self._cold_starts, warm_hits=self._warm_hits,
+            peak_instances=self._peak, sync_s=self._sync_busy,
+            store_billed_s=billed_s, sim_events=self._levents)
+        if self.platform is not None:
+            self.platform.ledger.charge("store", store_usd)
+            self.platform.ledger.attribute(self.job, self._result.cost_usd)
         return self._result

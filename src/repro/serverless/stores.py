@@ -77,11 +77,21 @@ class SharedLink:
         self._uniform_r = 0.0                # shared per-member rate
         self._target: Dict[int, float] = {}  # fid -> drain served-level
         self._theap: List[Tuple[float, int]] = []
-        self._cap_counts: Dict[float, int] = {}
+        # uniformity is judged on (cap, prio) pairs: the fast path needs
+        # every member stream to drain at one shared rate
+        self._cap_counts: Dict[Tuple[float, float], int] = {}
         self._total_w = 0
 
     def _cap(self, tr: Any) -> float:
         return getattr(tr, "cap_gbps", None) or self.per_stream_gbps
+
+    @staticmethod
+    def _prio(tr: Any) -> float:
+        """Water-filling priority weight: a flow with ``prio`` p claims p
+        equal shares per member stream (default 1.0 — plain max-min).
+        Lets latency-critical serving fetches keep a guaranteed fraction
+        of a link they share with training bulk syncs."""
+        return getattr(tr, "prio", 1.0) or 1.0
 
     def _tracked(self) -> bool:
         """True while every current flow was added via ``add_flow`` and
@@ -96,11 +106,14 @@ class SharedLink:
         ``tr.remaining_gb`` must be up to date (it is captured into the
         drain target here)."""
         cap = self._cap(tr)
+        key = (cap, self._prio(tr))
         was_uniform = self._tracked() or not self.flows
         self.flows[tr.fid] = tr
-        self._cap_counts[cap] = self._cap_counts.get(cap, 0) + 1
+        self._cap_counts[key] = self._cap_counts.get(key, 0) + 1
         self._total_w += getattr(tr, "weight", 1)
         if len(self._cap_counts) == 1:
+            # equal priorities cancel in the proportional share, so the
+            # uniform per-member rate is the classic one
             if was_uniform:
                 tgt = self._served + tr.remaining_gb
                 self._target[tr.fid] = tgt
@@ -119,12 +132,12 @@ class SharedLink:
         if tgt is not None:
             tr.remaining_gb = max(tgt - self._served, 0.0)
         del self.flows[fid]
-        cap = self._cap(tr)
-        c = self._cap_counts.get(cap, 0) - 1
+        key = (self._cap(tr), self._prio(tr))
+        c = self._cap_counts.get(key, 0) - 1
         if c > 0:
-            self._cap_counts[cap] = c
-        elif cap in self._cap_counts:
-            del self._cap_counts[cap]
+            self._cap_counts[key] = c
+        elif key in self._cap_counts:
+            del self._cap_counts[key]
         self._total_w -= getattr(tr, "weight", 1)
         if not self.flows:
             self._target.clear()
@@ -133,7 +146,7 @@ class SharedLink:
         elif len(self._cap_counts) == 1:
             if not self._target:
                 self._enter_uniform()
-            cap0 = next(iter(self._cap_counts))
+            cap0 = next(iter(self._cap_counts))[0]
             self._uniform_r = min(cap0, self.aggregate_gbps / self._total_w)
 
     def take_drained(self, eps_gb: float = 1e-12) -> List[Any]:
@@ -194,7 +207,11 @@ class SharedLink:
         A flow may carry ``weight`` member streams (a coalesced worker
         cohort): it counts as ``weight`` equal claimants on the link and
         its returned rate is the **per-member** rate — exactly the
-        allocation ``weight`` identical singleton flows would get."""
+        allocation ``weight`` identical singleton flows would get. A flow
+        may also carry ``prio`` (default 1.0): each of its member streams
+        claims ``prio`` shares, so under contention it holds a
+        ``prio``-weighted fraction of the aggregate (still bounded by its
+        own cap, and still spilling unused share to the others)."""
         key = (self.generation, len(self.flows))
         if key == self._rates_key:
             return self._rates
@@ -207,25 +224,33 @@ class SharedLink:
         default_cap = self.per_stream_gbps
         caps = [getattr(tr, "cap_gbps", None) or default_cap for tr in flows]
         wgts = [getattr(tr, "weight", 1) for tr in flows]
+        prios = [self._prio(tr) for tr in flows]
         left = sum(wgts)
-        cap0 = caps[0]
-        if all(c == cap0 for c in caps):
-            # uniform caps (the homogeneous-fleet common case): water-filling
-            # degenerates to classic processor sharing — either every flow is
-            # cap-bound or every flow takes an equal share; no sort needed
+        cap0, prio0 = caps[0], prios[0]
+        if (all(c == cap0 for c in caps)
+                and all(p == prio0 for p in prios)):
+            # uniform caps + priorities (the homogeneous-fleet common
+            # case): water-filling degenerates to classic processor
+            # sharing — either every flow is cap-bound or every flow takes
+            # an equal share; no sort needed (equal priorities cancel)
             r = min(cap0, self.aggregate_gbps / left)
             out = {tr.fid: r for tr in flows}
         else:
+            # weighted max-min: each member stream claims ``prio`` shares;
+            # visiting flows by ascending cap-to-claim ratio, a flow whose
+            # cap binds below its proportional share releases the excess
+            # to everyone behind it
             order = sorted(range(len(flows)),
-                           key=lambda i: (caps[i], flows[i].fid))
+                           key=lambda i: (caps[i] / prios[i], flows[i].fid))
             out = {}
             remaining = self.aggregate_gbps
+            claims = sum(w * p for w, p in zip(wgts, prios))
             for i in order:
                 wgt = wgts[i]
-                r = min(caps[i], remaining / left)
+                r = min(caps[i], prios[i] * remaining / claims)
                 out[flows[i].fid] = r
                 remaining -= r * wgt
-                left -= wgt
+                claims -= wgt * prios[i]
         self._rates_key, self._rates = key, out
         return out
 

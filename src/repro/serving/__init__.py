@@ -1,3 +1,4 @@
 from repro.serving.batcher import (  # noqa: F401
-    ServePolicy, ServeStats, exec_time, optimize_policy, simulate)
+    BatchRecord, ServePolicy, ServeStats, exec_time, optimize_policy,
+    simulate)
 from repro.serving.engine import Completion, Request, ServingEngine  # noqa: F401

@@ -30,6 +30,19 @@ class ServePolicy:
     memory_mb: int
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchRecord:
+    """One launched batch: requests ``[i, j)`` started executing at
+    ``start`` and finished at ``done``. ``free`` is when the server came
+    free for this batch (the previous batch's ``done``): the launch-wait
+    invariant is ``start <= max(arrival[i] + timeout_s, free)``."""
+    i: int
+    j: int
+    free: float
+    start: float
+    done: float
+
+
 @dataclasses.dataclass
 class ServeStats:
     p50_s: float
@@ -38,6 +51,7 @@ class ServeStats:
     batches: int
     requests: int
     mean_batch: float
+    records: Optional[List[BatchRecord]] = None
 
 
 def exec_time(flops_per_request: float, batch: int, memory_mb: int,
@@ -48,32 +62,52 @@ def exec_time(flops_per_request: float, batch: int, memory_mb: int,
 
 def simulate(policy: ServePolicy, *, arrival_rate: float,
              flops_per_request: float, horizon_s: float = 600.0,
-             seed: int = 0) -> ServeStats:
+             seed: int = 0, arrivals: Optional[np.ndarray] = None,
+             keep_records: bool = False) -> ServeStats:
     """Single-server batching queue: a batch launches when it reaches
-    max_batch or the oldest queued request has waited timeout_s."""
-    rng = np.random.RandomState(seed)
-    n = max(int(arrival_rate * horizon_s), 1)
-    arrivals = np.sort(rng.uniform(0.0, horizon_s, size=n))
+    max_batch, the oldest queued request has waited timeout_s since it
+    *arrived* (not since the server came free — a request already past
+    its timeout launches the moment the server does), or the arrival
+    stream is exhausted (a final partial batch never waits out a timeout
+    no future arrival can fill).
+
+    ``arrivals`` overrides the Poisson stream with explicit sorted
+    timestamps (used by the event-engine parity test); ``keep_records``
+    attaches per-batch :class:`BatchRecord` rows to the returned stats.
+    """
+    if arrivals is None:
+        rng = np.random.RandomState(seed)
+        n = max(int(arrival_rate * horizon_s), 1)
+        arrivals = np.sort(rng.uniform(0.0, horizon_s, size=n))
     latencies: List[float] = []
+    records: List[BatchRecord] = []
     gb_s = 0.0
     batches = 0
     i = 0
     t = 0.0
     while i < len(arrivals):
-        # wait until the batch is full or the oldest request times out
-        first = max(arrivals[i], t)
-        deadline = max(arrivals[i], t) + policy.timeout_s
+        # the oldest request's timeout clock starts at its arrival; when
+        # the server is still busy past that deadline, the batch launches
+        # the moment the server frees up
+        deadline = arrivals[i] + policy.timeout_s
+        launch = max(deadline, t)
         j = i
         while (j < len(arrivals) and j - i < policy.max_batch
-               and arrivals[j] <= deadline):
+               and arrivals[j] <= launch):
             j += 1
         batch = j - i
-        start = max(deadline if batch < policy.max_batch else arrivals[j - 1],
-                    t)
+        if batch == policy.max_batch or j == len(arrivals):
+            # full batch — or stream exhausted: nothing can join, go now
+            start = max(arrivals[j - 1], t)
+        else:
+            start = launch
         dt = exec_time(flops_per_request, batch, policy.memory_mb)
         done = start + dt
         for k in range(i, j):
             latencies.append(done - arrivals[k])
+        if keep_records:
+            records.append(BatchRecord(i=i, j=j, free=t, start=start,
+                                       done=done))
         gb_s += policy.memory_mb / 1024.0 * dt
         batches += 1
         t = done
@@ -85,7 +119,8 @@ def simulate(policy: ServePolicy, *, arrival_rate: float,
         p99_s=float(np.percentile(lat, 99)),
         cost_per_1k=cost / len(lat) * 1000.0,
         batches=batches, requests=len(lat),
-        mean_batch=len(lat) / batches)
+        mean_batch=len(lat) / batches,
+        records=records if keep_records else None)
 
 
 def optimize_policy(*, arrival_rate: float, flops_per_request: float,

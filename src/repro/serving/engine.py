@@ -47,11 +47,18 @@ class ServingEngine:
     def serve_batch(self, requests: List[Request]) -> List[Completion]:
         cfg = self.cfg
         b = len(requests)
-        plen = max(len(r.prompt) for r in requests)
+        lengths = {len(r.prompt) for r in requests}
+        if len(lengths) != 1:
+            # the zoo models take no per-row pad mask: left-padding would
+            # leak pad tokens into shorter prompts' attention and hand
+            # decode_step a wrong pos for them, silently corrupting output
+            raise ValueError(
+                "serve_batch requires all requests to share a prompt "
+                f"length (got lengths {sorted(lengths)}); bucket requests "
+                "by length before batching")
+        plen = lengths.pop()
         gen = max(r.max_new_tokens for r in requests)
-        toks = np.zeros((b, plen), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        toks = np.stack([r.prompt for r in requests]).astype(np.int32)
         batch = {"tokens": jnp.asarray(toks)}
         if cfg.family == "vlm":
             batch["image_embeds"] = jnp.zeros(

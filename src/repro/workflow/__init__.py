@@ -1,7 +1,10 @@
-"""Workflow layer: DAGs of ML tasks (HPO / NAS / fine-tune / eval) under
-one global deadline + budget on a shared serverless fleet.
+"""Workflow layer: DAGs of ML tasks (HPO / NAS / fine-tune / eval /
+deploy / online-update) under one global deadline + budget on a shared
+serverless fleet.
 
- - dag:          ``TaskSpec`` / ``WorkflowDAG`` — the typed task graph
+ - dag:          ``TaskSpec`` / ``WorkflowDAG`` — the typed task graph;
+                 ``deploy`` tasks carry a ``ServingTask`` and run as
+                 event-engine ``ServingJob``s on the shared domain
  - allocator:    ``BudgetAllocator`` — splits one ``Goal`` into per-task
                  grants, deadlines, and worker windows; re-allocates on
                  every completion

@@ -94,6 +94,10 @@ class BudgetAllocator:
         n_probe = self._grid[len(self._grid) // 2]
         self._probe_usd: Dict[str, float] = {}
         for t in dag:
+            if t.kind == "deploy":
+                # a serving job runs no Bayesian optimization probes
+                self._probe_usd[t.name] = 0.0
+                continue
             _, usd, _ = DEFAULT_CACHE.profile_cost(
                 t.workload, scheme, Config(n_probe, mem_probe),
                 t.batch_size, param_store, object_store, profile_iters)
@@ -116,6 +120,13 @@ class BudgetAllocator:
 
     def _curve(self, t: TaskSpec, param_store: ParamStore,
                object_store: ObjectStore) -> List[Tuple[int, float, float]]:
+        if t.kind == "deploy":
+            # serving: wall is the stream's duration (autoscaling absorbs
+            # load, it does not shorten the stream) and cost is the
+            # closed-form ServingTask estimate — flat across the worker
+            # grid, since serving scale is the admission policy's call
+            wall, cost = t.serving.estimate()
+            return [(n, wall, cost) for n in self._grid]
         out = []
         for n in self._grid:
             est = DEFAULT_CACHE.epoch_estimate(t.workload, self.scheme,

@@ -15,9 +15,15 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.core.constraints import Goal
 from repro.core.scheduler import EpochPlan
+from repro.serverless.arrivals import ServingTask
 from repro.serverless.worker import Workload
 
-TASK_KINDS = ("train", "finetune", "eval", "hpo", "nas")
+# "deploy" serves the current model as an event-engine ServingJob on the
+# workflow's shared domain; "online_update" is a continuous fine-tune on
+# freshly arrived samples (an OnlineStream window) — together they close
+# the paper's train -> eval -> deploy -> continuous-fine-tune loop.
+TASK_KINDS = ("train", "finetune", "eval", "hpo", "nas", "deploy",
+              "online_update")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,7 +37,14 @@ class TaskSpec:
     grant with an explicit user goal. ``warm_start_from`` names a task —
     or an ``HPOSweep`` — whose winning config seeds this task's Bayesian
     optimization. ``sweep``/``rung``/``slot`` are HPO bookkeeping filled
-    in by ``repro.workflow.tuner.expand_hpo``."""
+    in by ``repro.workflow.tuner.expand_hpo``.
+
+    A ``deploy`` task carries a :class:`ServingTask` in ``serving`` and
+    executes as an event-engine ``ServingJob`` instead of a
+    ``TaskScheduler`` run (``workload`` then names the *served* model).
+    An ``online_update`` task runs the training path on the samples that
+    arrived since the last update (the caller sizes ``samples`` from its
+    arrival stream)."""
     name: str
     workload: Workload
     epochs: int = 1
@@ -46,6 +59,7 @@ class TaskSpec:
     sweep: Optional[str] = None
     rung: int = -1
     slot: int = -1
+    serving: Optional[ServingTask] = None
 
     def __post_init__(self):
         object.__setattr__(self, "deps", tuple(self.deps))
@@ -53,6 +67,12 @@ class TaskSpec:
             raise ValueError("TaskSpec needs a name")
         if self.kind not in TASK_KINDS:
             raise ValueError(f"unknown task kind: {self.kind!r}")
+        if self.kind == "deploy" and self.serving is None:
+            raise ValueError(f"{self.name}: a deploy task needs a "
+                             f"ServingTask in `serving`")
+        if self.kind != "deploy" and self.serving is not None:
+            raise ValueError(f"{self.name}: `serving` is only valid on "
+                             f"deploy tasks")
         if self.epochs < 1:
             raise ValueError(f"{self.name}: epochs must be >= 1")
         if self.batch_size < 1:
@@ -61,6 +81,9 @@ class TaskSpec:
             raise ValueError(f"{self.name}: depends on itself")
 
     def plans(self) -> List[EpochPlan]:
+        if self.kind == "deploy":
+            raise ValueError(f"{self.name}: deploy tasks run as a "
+                             f"ServingJob, not as epoch plans")
         return [EpochPlan(self.batch_size, self.workload,
                           samples=self.samples) for _ in range(self.epochs)]
 

@@ -31,7 +31,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 from repro.core.bayes_opt import Config, ConfigSpace
 from repro.core.constraints import Goal
 from repro.core.scheduler import RunResult, TaskScheduler
-from repro.serverless.events import ContentionDomain
+from repro.serverless.arrivals import RequestStream
+from repro.serverless.events import ContentionDomain, ServingJob, ServingResult
 from repro.serverless.platform import ServerlessPlatform
 from repro.serverless.stores import ObjectStore, ParamStore
 from repro.workflow.allocator import BudgetAllocator, TaskAllocation
@@ -53,6 +54,10 @@ class WorkflowResult:
     assignments: Dict[str, int]         # HPO task -> trial id
     winners: Dict[str, Tuple[int, float]]   # sweep -> (trial, loss)
     trace: List[str]                    # deterministic workflow event log
+    # deploy tasks keep their full serving detail (latency percentiles,
+    # cold starts, fleet peak) alongside the RunResult stub in ``tasks``
+    serving: Dict[str, ServingResult] = dataclasses.field(
+        default_factory=dict)
 
     def config_of(self, name: str) -> Optional[Config]:
         hist = self.tasks[name].config_history
@@ -117,6 +122,7 @@ class WorkflowOrchestrator:
         self._start_t: Dict[str, float] = {}
         self._finish_t: Dict[str, float] = {}
         self._dropped: Set[str] = set()
+        self._serving: Dict[str, ServingResult] = {}
         self._allocs: Dict[str, TaskAllocation] = {}
         self._spent = 0.0
         self._trace: List[str] = []
@@ -153,7 +159,8 @@ class WorkflowOrchestrator:
             ledger_usd=self.platform.ledger.total_cost,
             dropped=[n for n in self.dag.order if n in self._dropped],
             allocations=dict(self._allocs), assignments=assignments,
-            winners=winners, trace=list(self._trace))
+            winners=winners, trace=list(self._trace),
+            serving=dict(self._serving))
 
     # -- internals -------------------------------------------------------------
     def _wall(self) -> float:
@@ -239,6 +246,9 @@ class WorkflowOrchestrator:
         start_t = max(start_t, 0.0)
         self._start_t[spec.name] = start_t
         self._allocs[spec.name] = alloc
+        if spec.kind == "deploy":
+            self._start_serving(spec, alloc, start_t)
+            return
         warm = self._warm_config(spec)
         space = dataclasses.replace(self.space,
                                     min_workers=alloc.min_workers,
@@ -287,6 +297,56 @@ class WorkflowOrchestrator:
 
     def _engine_done(self, tr: _TaskRun, eng):
         self._pump(tr, eng.result())
+
+    def _start_serving(self, spec: TaskSpec, alloc: TaskAllocation,
+                       start_t: float):
+        """Admit a ``deploy`` task as a ``ServingJob`` on the shared
+        domain: inference traffic contends with every co-running
+        training job on the same stores/links and bills the same
+        ledger (``ServingJob.result`` self-attributes)."""
+        sv = spec.serving
+        arr = RequestStream(sv.arrivals,
+                            seed=self._task_seed(spec.name)).arrivals(
+            start_t, sv.duration_s)
+        self._log(start_t,
+                  f"serve {spec.name} requests={len(arr)} "
+                  f"rate={sv.arrivals.mean_rps():.3f} "
+                  f"budget={alloc.budget_usd:.6f}")
+        tr = _TaskRun(spec, None, alloc, start_t)
+        self._running[spec.name] = tr
+        ServingJob(
+            sv.policy, arr, sv.flops_per_request,
+            self.param_store, self.object_store,
+            domain=self.domain, platform=self.platform,
+            model_bytes=sv.model_bytes, code_bytes=sv.code_bytes,
+            cold_start_s=sv.cold_start_s, keep_warm_s=sv.keep_warm_s,
+            max_instances=sv.max_instances,
+            refresh_every_s=sv.refresh_every_s,
+            link_priority=sv.link_priority, slo_s=sv.slo_s,
+            job=spec.name, start_at=start_t,
+            on_complete=lambda job, tr=tr: self._finish_serving(tr, job))
+
+    def _finish_serving(self, tr: _TaskRun, job: ServingJob):
+        name = tr.spec.name
+        res = job.result()          # charges store + attributes the job
+        self._serving[name] = res
+        del self._running[name]
+        # a RunResult stub so deploy tasks flow through the same
+        # bookkeeping (finish times, spent budget, dependents) as
+        # training tasks; the serving detail lives in ``serving``
+        self._finished[name] = RunResult(
+            events=[], wall_s=res.wall_s, cost_usd=res.cost_usd,
+            profile_s=0.0, profile_usd=0.0, epochs_done=1,
+            config_history=[])
+        t_end = tr.start_t + res.wall_s
+        self._finish_t[name] = t_end
+        self._spent += res.cost_usd
+        self._log(t_end,
+                  f"served {name} wall={res.wall_s:.6f} "
+                  f"cost={res.cost_usd:.6f} requests={res.requests} "
+                  f"p99={res.p99_s:.6f} cold={res.cold_starts} "
+                  f"peak={res.peak_instances}")
+        self._admit_ready()
 
     def _finish_task(self, tr: _TaskRun, result: RunResult):
         name = tr.spec.name

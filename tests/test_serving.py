@@ -77,3 +77,180 @@ def test_engine_batching_invariance(arch):
     for b, s in zip(batched, singles):
         assert b.rid == s.rid
         np.testing.assert_array_equal(b.tokens, s.tokens)
+
+
+# -- batcher fix pass (timeout anchor, final partial batch) ------------------
+
+def test_timeout_anchored_on_arrival_under_overload():
+    """The batching timeout clock starts at the oldest request's
+    *arrival*: when the server is busy past that deadline, the batch
+    launches the moment the server frees — never free-time + timeout."""
+    from repro.serving.batcher import exec_time
+    pol = ServePolicy(4, 0.5, 1024)
+    st = simulate(pol, arrival_rate=20.0, flops_per_request=2e11,
+                  horizon_s=20.0, seed=0, keep_records=True)
+    assert st.records and len(st.records) > 3
+    arr = None  # records carry indices; rebuild the stream for checks
+    rng = np.random.RandomState(0)
+    n = max(int(20.0 * 20.0), 1)
+    arr = np.sort(rng.uniform(0.0, 20.0, size=n))
+    overdue_immediate = 0
+    for r in st.records:
+        # launch-wait invariant: a batch never starts later than the
+        # larger of (oldest arrival + timeout) and server-free time
+        assert r.start <= max(arr[r.i] + pol.timeout_s, r.free) + 1e-9
+        if r.free > arr[r.i] + pol.timeout_s:
+            # overdue when the server freed: must go immediately (the
+            # old bug re-anchored the timeout on r.free, adding 0.5 s)
+            assert r.start <= max(r.free, arr[r.j - 1]) + 1e-9
+            overdue_immediate += 1
+    assert overdue_immediate > 0      # the overload regime was exercised
+
+
+def test_final_partial_batch_never_waits_out_timeout():
+    """A final partial batch that no future arrival can fill launches
+    immediately instead of burning the full timeout window."""
+    from repro.serving.batcher import exec_time
+    pol = ServePolicy(8, 30.0, 2048)
+    arr = np.array([1.0])
+    st = simulate(pol, arrival_rate=1.0, flops_per_request=FLOPS_PER_REQ,
+                  arrivals=arr, keep_records=True)
+    assert st.batches == 1
+    assert st.records[0].start == pytest.approx(1.0)
+    assert st.p99_s == pytest.approx(exec_time(FLOPS_PER_REQ, 1, 2048))
+
+
+def test_serving_slo_bench_skips_infeasible_policy():
+    """The benchmark reports an infeasible SLO as a row, not a crash."""
+    from benchmarks.serving_slo import policy_row
+    row = policy_row(40.0, 0.05)
+    assert row["policy"] == "infeasible"
+    assert row["evaluated"] > 0 and row["feasible"] == 0
+
+
+def test_serve_batch_rejects_mixed_prompt_lengths():
+    cfg = reduced(ARCHS["qwen2.5-3b"])
+    eng = ServingEngine(cfg, seed=0)
+    rng = np.random.RandomState(0)
+    p8 = rng.randint(0, cfg.vocab_size, size=8).astype(np.int32)
+    p12 = rng.randint(0, cfg.vocab_size, size=12).astype(np.int32)
+    with pytest.raises(ValueError, match="prompt length"):
+        eng.serve_batch([Request(0, p8, 4), Request(1, p12, 4)])
+    # equal lengths still serve
+    out = eng.serve_batch([Request(0, p8, 4),
+                           Request(1, p8[::-1].copy(), 4)])
+    assert len(out) == 2
+
+
+# -- ServingJob: serving as a first-class event-engine job -------------------
+
+def _serving_job(pol, arr, **kw):
+    from repro.serverless import ObjectStore, ParamStore, ServingJob
+    kw.setdefault("param_store", ParamStore())
+    kw.setdefault("object_store", ObjectStore())
+    ps, os_ = kw.pop("param_store"), kw.pop("object_store")
+    return ServingJob(pol, arr, FLOPS_PER_REQ, ps, os_, **kw)
+
+
+def test_serving_job_matches_simulate_exactly():
+    """Single instance, zero cold start, no model/code fetches, infinite
+    keep-warm: the event-engine job IS the closed simulate() queue —
+    bit-identical latency percentiles, batch count, and $/1k."""
+    pol = ServePolicy(4, 0.15, 2048)
+    rng = np.random.RandomState(3)
+    arr = np.sort(rng.uniform(0.0, 60.0, size=600))
+    sim = simulate(pol, arrival_rate=10.0, flops_per_request=FLOPS_PER_REQ,
+                   arrivals=arr)
+    res = _serving_job(pol, arr, max_instances=1, cold_start_s=0.0,
+                       keep_warm_s=float("inf")).run()
+    assert res.requests == sim.requests
+    assert res.batches == sim.batches
+    assert res.p50_s == pytest.approx(sim.p50_s, abs=1e-9)
+    assert res.p99_s == pytest.approx(sim.p99_s, abs=1e-9)
+    assert res.cost_per_1k == pytest.approx(sim.cost_per_1k, rel=1e-9)
+
+
+def test_serving_job_autoscales_under_load():
+    """With cold starts allowed, an overloaded stream scales out and the
+    tail improves over the single-server queue."""
+    pol = ServePolicy(4, 0.1, 2048)
+    rng = np.random.RandomState(5)
+    arr = np.sort(rng.uniform(0.0, 30.0, size=900))
+    single = _serving_job(pol, arr, max_instances=1, cold_start_s=0.0,
+                          keep_warm_s=float("inf")).run()
+    fleet = _serving_job(pol, arr, max_instances=8, cold_start_s=0.5,
+                         keep_warm_s=30.0).run()
+    assert fleet.peak_instances > 1
+    assert fleet.cold_starts >= fleet.peak_instances
+    assert fleet.p99_s < single.p99_s
+
+
+def test_serving_job_contends_with_training_on_shared_store():
+    """Train + serve in one ContentionDomain on one ParamStore: serving
+    p99 AND training wall both degrade vs isolated; with separate
+    stores in the same domain, neither does."""
+    from repro.serverless import (WORKLOADS, ContentionDomain, EventEngine,
+                                  ObjectStore, ParamStore, ServingJob)
+    w = WORKLOADS["bert-medium"]
+    pol = ServePolicy(8, 0.1, 3072)
+    rng = np.random.RandomState(11)
+    arr = np.sort(rng.uniform(0.0, 60.0, size=1800))
+
+    def train(ps, dom):
+        return EventEngine(w, "ps", 32, 3072, 1024, ps, ObjectStore(),
+                           samples=3000, seed=1, domain=dom,
+                           trace_enabled=False)
+
+    def serve(ps, dom, prio=1.0):
+        return ServingJob(pol, arr, FLOPS_PER_REQ, ps, ObjectStore(),
+                          domain=dom, model_bytes=w.param_count * 4.0,
+                          code_bytes=20e6, cold_start_s=1.0,
+                          keep_warm_s=30.0, max_instances=16,
+                          refresh_every_s=1.0, link_priority=prio)
+
+    rt_iso = train(ParamStore(), None).run()
+    rs_iso = serve(ParamStore(), ContentionDomain()).run()
+
+    def corun(shared, prio=1.0):
+        dom = ContentionDomain()
+        ps = ParamStore()
+        t = train(ps, dom)
+        s = serve(ps if shared else ParamStore(), dom, prio=prio)
+        dom.run()
+        return t.result(), s.result()
+
+    rt_sh, rs_sh = corun(shared=True)
+    rt_ct, rs_ct = corun(shared=False)
+    # both directions degrade on the shared store...
+    assert rs_sh.p99_s > rs_iso.p99_s * 1.02
+    assert rt_sh.wall_s > rt_iso.wall_s * 1.001
+    # ...and neither does in the separate-store control
+    assert rs_ct.p99_s == pytest.approx(rs_iso.p99_s, rel=1e-6)
+    assert rt_ct.wall_s == pytest.approx(rt_iso.wall_s, rel=1e-6)
+    # link priority bounds the serving inflation
+    _, rs_pr = corun(shared=True, prio=8.0)
+    assert rs_pr.p99_s < rs_sh.p99_s
+
+
+def test_shared_link_weighted_priority_shares():
+    """Water-filling with per-flow priorities: uncapped flows split the
+    aggregate in priority proportion; equal priorities keep the classic
+    even split (the uniform fast path)."""
+    from repro.serverless.events import _Transfer
+    from repro.serverless.stores import SharedLink
+
+    def mk(prios):
+        link = SharedLink("t", aggregate_gbps=8.0, per_stream_gbps=100.0,
+                          latency_s=0.0)
+        trs = [_Transfer(link, 1e9, 0.0, lambda: None, False, prio=p)
+               for p in prios]
+        for tr in trs:
+            link.add_flow(tr)
+        rates = link.rates()
+        return [rates[tr.fid] for tr in trs]
+
+    r3, r1 = mk([3.0, 1.0])
+    assert r3 == pytest.approx(6.0)
+    assert r1 == pytest.approx(2.0)
+    even = mk([2.0, 2.0])
+    assert even == pytest.approx([4.0, 4.0])

@@ -313,3 +313,67 @@ def test_workflow_tight_budget_truncates_not_overspends():
     orch, res = orchestrate(dag, goal, engine="event", sweeps=[sweep])
     assert res.ledger_usd <= goal.budget_usd
     assert set(res.tasks) | set(res.dropped) == set(dag.order)
+
+
+# -- deploy / online_update: the continuous train->serve loop ----------------
+
+def test_deploy_task_validation():
+    from repro.serverless import ArrivalSpec, ServingTask
+    from repro.serving import ServePolicy
+    sv = ServingTask(policy=ServePolicy(8, 0.2, 2048),
+                     arrivals=ArrivalSpec(base_rps=5.0), duration_s=60.0,
+                     flops_per_request=2e9)
+    with pytest.raises(ValueError, match="needs a ServingTask"):
+        TaskSpec("d", W, kind="deploy")
+    with pytest.raises(ValueError, match="only valid on"):
+        TaskSpec("t", W, kind="train", serving=sv)
+    spec = TaskSpec("d", W, kind="deploy", serving=sv)
+    with pytest.raises(ValueError, match="ServingJob"):
+        spec.plans()
+
+
+def test_workflow_deploy_and_online_update():
+    """train -> eval -> deploy -> online_update as one goal-bounded DAG:
+    the deploy task runs as a ServingJob on the shared domain, its
+    serving detail lands in WorkflowResult.serving, and its cost is
+    attributed on the one shared ledger."""
+    from repro.serverless import (ArrivalSpec, ObjectStore, ParamStore,
+                                  ServerlessPlatform, ServingTask)
+    from repro.serving import ServePolicy
+    sv = ServingTask(policy=ServePolicy(8, 0.2, 2048),
+                     arrivals=ArrivalSpec(base_rps=20.0,
+                                          bursts_per_hour=6.0),
+                     duration_s=90.0, flops_per_request=2e9,
+                     model_bytes=50e6, code_bytes=5e6, slo_s=1.0,
+                     cold_start_s=0.8, keep_warm_s=30.0, max_instances=8)
+    dag = WorkflowDAG([
+        TaskSpec("train", W, epochs=1, batch_size=512, samples=4096),
+        TaskSpec("eval", W, epochs=1, batch_size=512, samples=1024,
+                 deps=("train",), kind="eval"),
+        TaskSpec("deploy", W, deps=("eval",), kind="deploy", serving=sv),
+        TaskSpec("update", W, epochs=1, batch_size=512, samples=2048,
+                 deps=("deploy",), kind="online_update",
+                 warm_start_from="train"),
+    ])
+    plat = ServerlessPlatform(seed=0)
+    orch = WorkflowOrchestrator(
+        dag, Goal("deadline_budget", deadline_s=4000.0, budget_usd=50.0),
+        plat, ObjectStore(), ParamStore(),
+        space=ConfigSpace(max_workers=16), engine="event", seed=0)
+    res = orch.run()
+    assert set(res.tasks) == {"train", "eval", "deploy", "update"}
+    srv = res.serving["deploy"]
+    assert srv.requests > 0 and srv.batches > 0
+    # the deploy task flows through normal DAG bookkeeping
+    assert res.finish_s["eval"] <= res.start_s["deploy"]
+    assert res.finish_s["deploy"] <= res.start_s["update"] + 1e-9
+    assert res.tasks["deploy"].wall_s == pytest.approx(srv.wall_s)
+    # one ledger, per-job attribution (ServingJob self-attributes)
+    assert plat.ledger.job_usd["deploy"] == pytest.approx(srv.cost_usd)
+    assert res.cost_usd == pytest.approx(
+        sum(r.total_cost for r in res.tasks.values()))
+    # the serve trace lines made it into the deterministic log
+    assert any(line.split(" ", 1)[1].startswith("serve deploy")
+               for line in res.trace)
+    assert any(line.split(" ", 1)[1].startswith("served deploy")
+               for line in res.trace)
