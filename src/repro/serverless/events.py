@@ -98,6 +98,7 @@ Throughput machinery (the 10k-worker regime; see docs/PERF.md):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import heapq
 import itertools
 import math
@@ -119,6 +120,7 @@ from repro.serverless.worker import (Workload, compute_time,
                                      fleet_local_batches, parse_sync_mode)
 
 _EPS_GB = 1e-12          # flow remainder considered complete (~1e-3 byte)
+_INF = math.inf
 
 
 class CalendarQueue:
@@ -135,7 +137,7 @@ class CalendarQueue:
     the bucket holding the global minimum, so sparse far-future events
     (keep-alive caps, shock arrivals) cannot stall the scan."""
 
-    __slots__ = ("_nb", "_width", "_buckets", "_cur_abs", "_size")
+    __slots__ = ("_nb", "_width", "_buckets", "_cur_abs", "_size", "_cold")
 
     def __init__(self, nbuckets: int = 32, width: float = 1.0):
         self._nb = nbuckets
@@ -143,6 +145,7 @@ class CalendarQueue:
         self._buckets: List[list] = [[] for _ in range(nbuckets)]
         self._cur_abs = 0            # absolute (un-wrapped) bucket index
         self._size = 0
+        self._cold = 0               # consecutive under-occupancy pops
 
     def __len__(self) -> int:
         return self._size
@@ -166,7 +169,19 @@ class CalendarQueue:
         if not self._size:
             raise IndexError("pop from empty CalendarQueue")
         if self._nb > 32 and self._size < self._nb // 6:
-            self._resize(max(self._nb // 2, 32))
+            # shrink with hysteresis, straight to the occupancy-matched
+            # size: a periodic workload (a fan-out window's wave every
+            # iteration) keeps its ring across the brief sparse phase
+            # instead of paying a shrink+regrow cycle per period
+            self._cold += 1
+            if self._cold >= 128:
+                self._cold = 0
+                nb = 32
+                while nb < self._size:
+                    nb <<= 1
+                self._resize(max(nb, 32))
+        else:
+            self._cold = 0
         nb, width, buckets = self._nb, self._width, self._buckets
         ab = self._cur_abs
         scanned = 0
@@ -185,23 +200,54 @@ class CalendarQueue:
                 ab = max(int(head[0] / width), self._cur_abs)
                 scanned = 0
 
+    def push_bulk(self, evs: list):
+        """Insert many events in one call: one resize check for the whole
+        batch and no per-event method dispatch. The dequeue order is the
+        ``(t, seq)`` record order either way, so bulk insertion is
+        observationally identical to pushing one at a time."""
+        if not evs:
+            return
+        nb, width, buckets = self._nb, self._width, self._buckets
+        cur = self._cur_abs
+        empty = self._size == 0
+        for ev in evs:
+            ab = int(ev[0] / width)
+            if ab < cur:             # same-instant event during dispatch
+                ab = cur
+            if empty:                # fast-forward an idle scan position
+                self._cur_abs = cur = ab
+                empty = False
+            heapq.heappush(buckets[ab % nb], ev)
+        self._size += len(evs)
+        new_nb = self._nb
+        while self._size > 2 * new_nb:
+            new_nb *= 2
+        if new_nb != self._nb:
+            self._resize(new_nb)
+
     def _resize(self, new_nb: int):
         evs = [e for b in self._buckets for e in b]
-        evs.sort()
-        gaps = [b[0] - a[0] for a, b in zip(evs, evs[1:]) if b[0] > a[0]]
-        if gaps:
+        if evs:
             # ~3 events per bucket-width keeps both the scan and the
-            # per-bucket heaps short
-            self._width = max(3.0 * sum(gaps) / len(gaps), 1e-9)
+            # per-bucket heaps short; the span/count estimate of the mean
+            # gap needs no sort, so a resize is O(n)
+            lo = min(evs)[0]
+            hi = max(ev[0] for ev in evs)
+            if hi > lo:
+                self._width = max(3.0 * (hi - lo) / len(evs), 1e-9)
+            base = int(lo / self._width)
+        else:
+            base = 0
         self._nb = new_nb
         self._buckets = [[] for _ in range(new_nb)]
-        base = int(evs[0][0] / self._width) if evs else 0
         self._cur_abs = base
+        width = self._width
         for e in evs:
-            ab = max(int(e[0] / self._width), base)
-            self._buckets[ab % new_nb].append(e)
+            ab = int(e[0] / width)
+            self._buckets[(ab if ab > base else base) % new_nb].append(e)
         for b in self._buckets:
-            heapq.heapify(b)
+            if len(b) > 1:
+                b.sort()
 
 
 class _Transfer:
@@ -260,16 +306,22 @@ class ContentionDomain:
         self.dispatched = 0     # queue events executed (profiling counter)
         # union of time *any* engine's sync transfers are outstanding: the
         # honest keep-alive window for one param store shared across jobs
-        # (per-engine sync_s sums would double-bill the overlap)
+        # (per-engine sync_s sums would double-bill the overlap).
+        # Accounting is interval-based: engines report their 0<->1
+        # sync-outstanding transitions (``_sync_on``/``_sync_off``) and the
+        # domain closes [on, off) intervals — no per-time-advance scans.
         self.sync_union_s = 0.0
+        self._sync_n = 0        # engines with sync transfers outstanding
+        self._sync_t0 = 0.0
         # same union, kept per param store (id) — the billing basis when a
         # store is shared: each engine is billed its proportional share
         self._store_sync: Dict[int, float] = {}
+        self._store_n: Dict[int, int] = {}
+        self._store_t0: Dict[int, float] = {}
         # union seconds already allocated to taken results, per store —
         # lets late-arriving engines (workflow tasks admitted at t > 0)
         # bill against only the not-yet-allocated remainder
         self._store_billed: Dict[int, float] = {}
-
     def at(self, t: float, fn: Callable):
         self._q.push((t, next(self._seq), fn, None))
 
@@ -278,6 +330,14 @@ class ContentionDomain:
         prebound method and ``arg`` its payload tuple — no per-event
         closure is allocated."""
         self._q.push((t, next(self._seq), fn, arg))
+
+    def at2_bulk(self, items):
+        """Bulk-schedule ``(t, fn, arg)`` records in one queue insert —
+        the per-iteration compute-finish waves and serving arrival slabs
+        ride this. Safe mid-dispatch: dequeue order is the ``(t, seq)``
+        total order however events were inserted."""
+        seq = self._seq
+        self._q.push_bulk([(t, next(seq), fn, arg) for t, fn, arg in items])
 
     def link_for(self, store, kind: str) -> SharedLink:
         """The one SharedLink all engines in this domain use for ``store``
@@ -294,6 +354,11 @@ class ContentionDomain:
         engine's start at ``max(start_at, now)`` on the live queue."""
         self._engines.append(engine)
         self._groups.setdefault(id(engine.param_store), []).append(engine)
+        if len(self._engines) > 1:
+            # a second job voids the sole-flow-source premise of any
+            # armed drain cascade (see _cascade) — permanently
+            for link in self._links.values():
+                link.cascade = None
         if self._running:
             # the engine is still mid-__init__ when it registers: defer the
             # launch onto the live queue so it starts (at its own start_at,
@@ -317,35 +382,349 @@ class ContentionDomain:
         future begin exactly then."""
         self._running = True
         try:
+            q = self._q
+            pop = q.pop
             for eng in list(self._engines):
                 self._launch(eng)
-            q = self._q
-            while q:
-                t, _, fn, arg = q.pop()
-                if t > self.now:
-                    dt = t - self.now
-                    engines = self._engines
-                    if any(e._sync_active > 0 for e in engines):
-                        self.sync_union_s += dt
-                        for sid, engs in self._groups.items():
-                            if any(e._sync_active > 0 for e in engs):
-                                self._store_sync[sid] = (
-                                    self._store_sync.get(sid, 0.0) + dt)
-                        for eng in engines:
-                            if eng._sync_active > 0:
-                                eng._sync_busy += dt
-                    for link in self._links.values():
-                        link.progress(t)
-                    self.now = t
-                self.dispatched += 1
-                if arg is None:
-                    fn()
-                else:
-                    fn(arg)
+            dispatched = 0
+            heappop = heapq.heappop
+            try:
+                while q._size:
+                    # inline CalendarQueue.pop fast path: the head of the
+                    # current bucket is due within its year — the full
+                    # pop() handles scans, shrink hysteresis and jumps
+                    b = q._buckets[q._cur_abs % q._nb]
+                    if b and b[0][0] < (q._cur_abs + 1) * q._width:
+                        q._size -= 1
+                        t, _, fn, arg = heappop(b)
+                    else:
+                        t, _, fn, arg = pop()
+                    if t > self.now:
+                        self.now = t
+                    dispatched += 1
+                    if arg is None:
+                        fn()
+                    else:
+                        fn(arg)
+            finally:
+                self.dispatched += dispatched
         finally:
             self._running = False
         for eng in self._engines:
             eng._check_complete()
+
+    # -- sync-window (keep-alive) interval accounting ------------------------
+    def _sync_on(self, eng):
+        """``eng`` now has at least one sync transfer outstanding (its
+        count just went 0 -> 1): open its interval, and the store-group
+        and domain union intervals if they were closed."""
+        now = self.now
+        eng._sync_t0 = now
+        sid = eng._sid
+        n = self._store_n.get(sid, 0)
+        if n == 0:
+            self._store_t0[sid] = now
+        self._store_n[sid] = n + 1
+        if self._sync_n == 0:
+            self._sync_t0 = now
+        self._sync_n += 1
+
+    def _sync_off(self, eng):
+        """``eng``'s sync-outstanding count just went 1 -> 0: close its
+        interval (and the store/domain unions when it was the last
+        engine holding them open)."""
+        now = self.now
+        eng._sync_busy += now - eng._sync_t0
+        sid = eng._sid
+        n = self._store_n[sid] - 1
+        self._store_n[sid] = n
+        if n == 0:
+            self._store_sync[sid] = (self._store_sync.get(sid, 0.0)
+                                     + (now - self._store_t0[sid]))
+        self._sync_n -= 1
+        if self._sync_n == 0:
+            self.sync_union_s += now - self._sync_t0
+
+    # -- link completion prediction (class-based, lazy) ----------------------
+    def _relink(self, link: SharedLink):
+        """Flow set changed: refresh the drain predictions. In class mode
+        only each class's *earliest* drain target is (re-)keyed in the
+        calendar queue, and only when it moved **earlier** than the
+        pending prediction — predictions that moved later are left to
+        fire early, find nothing drained, and re-arm (lazy deletion).
+        Untracked links keep the legacy one-prediction-per-mutation
+        scheme."""
+        flows = link.flows
+        if not flows:
+            return
+        if link._ntracked == len(flows):
+            now = self.now
+            for c in link.classes.values():
+                if not c.n:
+                    continue
+                heap = c.heap
+                target = c.target
+                while True:
+                    tgt, fid = heap[0]
+                    if target.get(fid) == tgt:
+                        break
+                    heapq.heappop(heap)          # lazy-deleted entries
+                d = tgt - c.served
+                if d < 0.0:
+                    d = 0.0
+                t = now + d / c.rate
+                if t < c.pred_t:
+                    c.pred_t = t
+                    c.pred_id += 1
+                    self._q.push((t, next(self._seq),
+                                  self._class_event, (link, c, c.pred_id)))
+        else:
+            link.generation += 1
+            t_next = self.now + link.next_completion_dt()
+            self.at2(t_next, self._legacy_link_event,
+                     (link, link.generation))
+
+    def _class_event(self, payload):
+        """One class's predicted earliest drain time arrived."""
+        link, c, pid = payload
+        if pid != c.pred_id:
+            return                               # stale prediction
+        c.pred_t = _INF
+        flows = link.flows
+        if link._ntracked != len(flows) or not c.n:
+            return                               # fell off the class path
+        now = self.now
+        if link.last_t != now:
+            if link._active == 1:
+                # c is the only active class: advance its served integral
+                # inline (identical arithmetic to progress()). The
+                # multi-class path stays a real progress() call — tests
+                # observe link advances by wrapping it
+                c.served += c.rate * (now - link.last_t)
+                link.last_t = now
+            else:
+                link.progress(now)
+        served = c.served
+        heap, target = c.heap, c.target
+        done = None
+        while heap:
+            tgt, fid = heap[0]
+            if target.get(fid) != tgt:
+                heapq.heappop(heap)
+                continue
+            if tgt - served > _EPS_GB:
+                break
+            # inlined remove_flow for the tracked drain path: same
+            # arithmetic, but the live heap entry pops here instead of
+            # lingering for lazy deletion, and rates refresh once after
+            # the whole batch (nothing observes the intermediate sets)
+            heapq.heappop(heap)
+            del target[fid]
+            tr = flows.pop(fid)
+            d = tgt - served
+            tr.remaining_gb = d if d > 0.0 else 0.0
+            link.generation += 1
+            w = tr.weight
+            link._total_w -= w
+            link._ntracked -= 1
+            c.n -= 1
+            c.w -= w
+            if done is None:
+                done = [tr]
+            else:
+                done.append(tr)
+        if done is None:
+            # the prediction was made at higher rates (the lazy scheme
+            # never re-keys a drain that moved later): re-arm at the
+            # class's current earliest drain
+            if heap:
+                d = heap[0][0] - served
+                if d < 0.0:
+                    d = 0.0
+                t = now + d / c.rate
+                c.pred_t = t
+                c.pred_id += 1
+                self._q.push((t, next(self._seq),
+                              self._class_event, (link, c, c.pred_id)))
+            return
+        if c.n == 0:
+            link._active -= 1
+            heap.clear()
+            c.pred_id += 1
+        if link._active == 1 and c.n:
+            # single-class fast path: the refresh is the processor-sharing
+            # formula and the only class _relink could re-key is this one
+            # — both inline (identical arithmetic to the generic path)
+            c.rate = rate = min(c.cap, link.aggregate_gbps / link._total_w)
+            win = link.cascade
+            if (win is not None and c.n > 1 and link.setup == 0
+                    and win.pending == 0):
+                for tr in done:
+                    tr.cb()
+                self._cascade(link, c, win)
+                return
+            while True:
+                tgt, fid = heap[0]
+                if target.get(fid) == tgt:
+                    break
+                heapq.heappop(heap)
+            d = tgt - served
+            if d < 0.0:
+                d = 0.0
+            t = now + d / rate
+            c.pred_t = t
+            c.pred_id += 1
+            self._q.push((t, next(self._seq),
+                          self._class_event, (link, c, c.pred_id)))
+            for tr in done:
+                tr.cb()
+            return
+        if link._active:
+            link._refresh_rates()
+        self._relink(link)
+        for tr in done:
+            tr.cb()
+
+    def _cascade(self, link: SharedLink, c, win):
+        """Inline post-join drain cascade for a fan-out window that owns
+        every flow on ``link`` (single window phase, window spanning the
+        whole fleet, one engine in the domain — armed via
+        ``link.cascade``).
+
+        Once every member has joined, no flow-set change can precede the
+        next drain: the remaining schedule is a closed cascade whose
+        intermediate completions are pure counter updates (an arriving
+        member is bookkeeping; the engine sync count stays positive
+        while the last flow is in flight). Replaying the exact per-event
+        arithmetic here — progress to the predicted drain time, drain
+        every head within eps, refresh the single-class rate — commits
+        those drains without dispatching an event each; only the final
+        flow (sync-interval close + barrier merge) and anything past the
+        invocation's cap deadline go back through the queue."""
+        eng = win.eng
+        agg = link.aggregate_gbps
+        cap = c.cap
+        cap_t = win.w.cap_t          # never cascade past a preemption
+        heap, target, flows = c.heap, c.target, link.flows
+        served = c.served
+        rate = c.rate
+        t = link.last_t              # == self.now: caller just progressed
+        stage = win.stage
+        trs = win.trs
+        drained = 0
+        while c.n > 1:
+            while True:              # clean lazy-deleted heads
+                tgt, fid = heap[0]
+                if target.get(fid) == tgt:
+                    break
+                heapq.heappop(heap)
+            d = tgt - served
+            if d < 0.0:
+                d = 0.0
+            t2 = t + d / rate        # the prediction an event would carry
+            if t2 >= cap_t:
+                break                # the cap fires first: let it pause
+            dt = t2 - t              # mirror SharedLink.progress exactly
+            if dt > 0.0:
+                served += rate * dt
+            t = t2
+            nb = 0
+            while heap:              # the event's within-eps drain batch
+                tgt, fid = heap[0]
+                if target.get(fid) != tgt:
+                    heapq.heappop(heap)
+                    continue
+                if tgt - served > _EPS_GB:
+                    break
+                heapq.heappop(heap)
+                del target[fid]
+                tr = flows.pop(fid)
+                d = tgt - served
+                tr.remaining_gb = d if d > 0.0 else 0.0
+                link.generation += 1
+                link._total_w -= tr.weight
+                link._ntracked -= 1
+                c.n -= 1
+                c.w -= tr.weight
+                if tr.is_sync:
+                    eng._sync_active -= 1    # stays > 0: last flow lives
+                i = tr.cb.args[0]            # cb is partial(_xfer_done, i)
+                stage[i] = _FAN_ARRIVED
+                trs[i] = None
+                nb += 1
+                if c.n == 1:
+                    break
+            if nb == 0:
+                break                # fp guard: fall back to a real event
+            drained += nb
+            rate = c.rate = min(cap, agg / link._total_w)
+        c.served = served
+        link.last_t = t
+        win.arrived += drained
+        eng._levents += drained
+        # the remainder — the final flow, or everything past the cap —
+        # re-enters the normal prediction machinery
+        while True:
+            tgt, fid = heap[0]
+            if target.get(fid) == tgt:
+                break
+            heapq.heappop(heap)
+        d = tgt - served
+        if d < 0.0:
+            d = 0.0
+        tf = t + d / rate
+        c.pred_t = tf
+        c.pred_id += 1
+        self.at2(tf, self._class_event, (link, c, c.pred_id))
+
+    def _legacy_link_event(self, payload):
+        """Materialized-fallback drain event (untracked flow sets)."""
+        link, gen = payload
+        if gen != link.generation:
+            return                               # stale prediction
+        link.progress(self.now)
+        done = link.take_drained(_EPS_GB)
+        self._relink(link)
+        for tr in done:
+            tr.cb()
+
+    def _setup_done(self, payload):
+        """A transfer's setup-latency window elapsed: it becomes a flow
+        on its link (shared by training engines and serving jobs)."""
+        tr, token = payload
+        if token != tr.token:
+            return                               # paused during setup
+        link = tr.link
+        link.setup -= 1
+        tr.latency_left = 0.0
+        if tr.remaining_gb <= _EPS_GB:
+            self._relink(link)                   # busy-window bookkeeping
+            tr.cb()                              # cb releases the activity slot
+            return
+        c = link.add_flow(tr, self.now)
+        if c is None:
+            self._relink(link)
+            return
+        # a join only lowers rates (water-filling allocations are monotone
+        # non-increasing in additions), so every other class's earliest
+        # drain moved later — the lazy scheme leaves those to fire early.
+        # Only the joined class can need an earlier prediction: re-key it
+        # directly (same arithmetic as _relink restricted to c)
+        heap, target = c.heap, c.target
+        while True:
+            tgt, fid = heap[0]
+            if target.get(fid) == tgt:
+                break
+            heapq.heappop(heap)
+        d = tgt - c.served
+        if d < 0.0:
+            d = 0.0
+        t = self.now + d / c.rate
+        if t < c.pred_t:
+            c.pred_t = t
+            c.pred_id += 1
+            self._q.push((t, next(self._seq),
+                          self._class_event, (link, c, c.pred_id)))
 
     def store_keep_alive_share(self, engine: "EventEngine") -> float:
         """One engine's billing share of its param store's keep-alive
@@ -361,8 +740,19 @@ class ContentionDomain:
         split exactly; for a workflow, where engines join and settle at
         different times, it keeps the running total honest."""
         sid = id(engine.param_store)
+        now = self.now
+        if self._store_n.get(sid, 0) > 0:
+            # the store's keep-alive interval is still open (another job
+            # mid-sync): settle it to ``now`` so the pool is current
+            self._store_sync[sid] = (self._store_sync.get(sid, 0.0)
+                                     + (now - self._store_t0[sid]))
+            self._store_t0[sid] = now
         unbilled = [e for e in self._groups.get(sid, [engine])
                     if e._result is None]
+        for e in unbilled:
+            if e._sync_active > 0:               # settle open engine windows
+                e._sync_busy += now - e._sync_t0
+                e._sync_t0 = now
         total = sum(e._sync_busy for e in unbilled)
         if total <= 0.0:
             return 0.0
@@ -457,6 +847,15 @@ class _FleetDraws:
             self._grow(k)
         return float(self._factor[wid, k])
 
+    def factor_row(self, members: range, k: int) -> np.ndarray:
+        """One cohort's straggler multipliers for attempt ``k`` — the
+        same cells ``factor(wid, k)`` returns, read as one slice."""
+        if self.sigma <= 0.0:
+            return np.ones(len(members))
+        if k >= self._cols:
+            self._grow(k)
+        return self._factor[members.start:members.stop, k]
+
     def failed(self, wid: int, k: int) -> Tuple[bool, float]:
         """(did attempt ``k`` fail mid-iteration, fraction completed)."""
         if self.failure_rate <= 0.0:
@@ -474,8 +873,9 @@ class _WorkerState:
     records, checkpoints, and trace lines are still per member."""
 
     __slots__ = ("wid", "members", "count", "it", "draws", "inv_recs",
-                 "inv_count", "inv_gen", "inv_cont", "cap_gen", "seg_gen",
-                 "seg_end", "activity", "pending", "restarting", "finished")
+                 "inv_count", "inv_gen", "inv_cont", "cap_gen", "cap_t",
+                 "seg_gen", "seg_end", "activity", "pending", "restarting",
+                 "finished", "fan")
 
     def __init__(self, members: range):
         self.wid = members.start
@@ -488,12 +888,14 @@ class _WorkerState:
         self.inv_gen = 0              # invalidates stale init-window events
         self.inv_cont = None          # continuation owed by the init window
         self.cap_gen = 0              # invalidates scheduled cap events
+        self.cap_t = math.inf         # current invocation's cap deadline
         self.seg_gen = 0              # invalidates scheduled compute ends
         self.seg_end = 0.0
         self.activity: Optional[Tuple] = None   # ("compute"|"transfer"|...)
         self.pending = None           # continuation to run after a restart
         self.restarting = False
         self.finished = False
+        self.fan = None               # lazily-built _FanoutWindow (σ>0 cohorts)
 
 
 class _PipelineRun:
@@ -619,6 +1021,224 @@ class _PipelineRun:
             self.tr = None
 
 
+_FAN_COMPUTING = -1    # _FanoutWindow member stage: compute in flight
+_FAN_ARRIVED = -2      # _FanoutWindow member stage: waiting at the merge
+
+
+class _FanoutWindow:
+    """One σ>0 cohort's per-iteration straggler fan-out.
+
+    Under bsp, a cohort's members diverge exactly once per iteration —
+    at the stochastic compute draw — and provably re-merge at the plan's
+    first ``barrier_after`` phase: past that barrier every member has
+    identical state again (deterministic equal transfers preserve
+    lockstep, the same argument that makes σ=0 coalescing exact). So the
+    cohort machinery runs everything outside the window (invocations,
+    data fetch, post-barrier phases, billing), and this window runs the
+    divergent stretch per member: one vectorized row of compute draws
+    bulk-pushed as per-member finish events, then each member walks its
+    participating leading phases as ordinary per-member link flows and
+    counts itself arrived; the last arrival joins the cohort barrier
+    with the full member weight.
+
+    Every per-member step reuses the exact per-worker primitives
+    (``_begin_setup`` / ``_detach_transfer`` / ``_reattach_transfer``,
+    the domain's lazy drain predictions, the engine sync-window counter)
+    so event times, rates, sync intervals, and logical-event counts are
+    identical to the per-worker simulation — only the dispatch
+    bookkeeping is batched. A duration-cap preemption pauses the window
+    member-by-member (compute remainders kept, flows detached with
+    progress) and resumes it after the cohort re-invoke."""
+
+    __slots__ = ("eng", "w", "m", "phases", "bar_name", "cont", "stage",
+                 "t_end", "trs", "cbs", "rem", "gen", "arrived", "pending",
+                 "cascade_ok", "base_arr")
+
+    def __init__(self, eng: "EventEngine", w: "_WorkerState"):
+        self.eng = eng
+        self.w = w
+        m = self.m = w.count
+        phases = eng.plan.phases
+        bar = next(i for i, ph in enumerate(phases) if ph.barrier_after)
+        self.bar_name = phases[bar].name
+        # members share the leader's participation: cohorts cut at every
+        # fan_in boundary, so w.wid decides for the whole range
+        self.phases = [ph for ph in phases[:bar + 1] if w.wid < ph.fan_in]
+        self.cont = lambda: eng._comm_phase(w, bar + 1)
+        self.stage = [_FAN_COMPUTING] * m
+        self.t_end = [0.0] * m
+        self.trs: List[Optional[_Transfer]] = [None] * m
+        self.cbs = [functools.partial(self._xfer_done, i) for i in range(m)]
+        self.rem: Optional[List[float]] = None
+        self.gen = 0
+        self.arrived = 0
+        self.pending = 0              # members whose compute has not finished
+        self.base_arr = np.asarray(eng.base_compute_s[w.wid:w.wid + m])
+        # drain-cascade eligibility (see ContentionDomain._cascade): a
+        # single window phase and a window spanning the whole fleet mean
+        # every flow on that link belongs to this window
+        self.cascade_ok = len(self.phases) == 1 and m == eng.n
+
+    def start(self):
+        eng = self.eng
+        w = self.w
+        w.activity = ("fanout", self)
+        k = w.draws
+        w.draws = k + 1
+        factors = eng._draws.factor_row(w.members, k)
+        slow = (eng.slowdown_factor
+                if (eng.slowdown_at_iter is not None
+                    and w.it >= eng.slowdown_at_iter) else None)
+        if slow is not None:
+            factors = factors * slow
+        now = eng.now
+        m = self.m
+        # the whole compute-end row in one vector op — elementwise IEEE
+        # float64, bit-equal to the per-member Python arithmetic
+        te_row = (now + self.base_arr * factors).tolist()
+        self.gen += 1
+        gen = self.gen
+        self.arrived = 0
+        self.pending = m
+        self.stage = [_FAN_COMPUTING] * m
+        self.t_end = te_row
+        trs = self.trs
+        fn = eng._fan_compute_done
+        # members' first transfers are known up front: create them and
+        # pre-push their setup-elapsed events (at compute end + latency)
+        # alongside the compute ends — one bulk insert for the whole
+        # window, and the compute handler shrinks to counter updates.
+        # Per-worker equivalence: the setup event still fires at exactly
+        # compute_end + latency with the same (tr, token) payload, and a
+        # preemption stales it through the usual token bump.
+        dom = eng.domain
+        seq = dom._seq
+        ph = self.phases[0] if self.phases else None
+        if ph is not None:
+            link = eng.links[ph.store]
+            if self.cascade_ok and len(dom._engines) == 1:
+                link.cascade = self      # sole flow source: cascade legal
+            is_sync = ph.store == "param"
+            nbytes = ph.nbytes
+            lat = link.latency_s * max(ph.requests, 1)
+            setup_done = dom._setup_done
+            cbs = self.cbs
+            net_cap = eng.net_cap
+            wid0 = w.members.start
+            trs[:] = [_Transfer(link, nbytes, lat, cbs[i], is_sync,
+                                cap_gbps=net_cap[wid0 + i]
+                                if is_sync else None)
+                      for i in range(m)]
+            # seq order: all compute ends, then all setup elapses. Only
+            # equal-timestamp ties could notice (continuous draws: none);
+            # each setup still fires at exactly compute_end + latency
+            evs = [(te_row[i], next(seq), fn, (self, i, gen))
+                   for i in range(m)]
+            if lat > 0.0:
+                evs += [(te_row[i] + lat, next(seq), setup_done,
+                         (tr, tr.token)) for i, tr in enumerate(trs)]
+        else:
+            trs[:] = [None] * m
+            evs = [(te_row[i], next(seq), fn, (self, i, gen))
+                   for i in range(m)]
+        dom._q.push_bulk(evs)
+
+    def _advance(self, i: int, j: int):
+        """Member ``i`` enters window phase ``j`` (or arrives)."""
+        phases = self.phases
+        if j >= len(phases):
+            self.stage[i] = _FAN_ARRIVED
+            self.trs[i] = None
+            self.arrived += 1
+            if self.arrived == self.m:
+                self._merge()
+            return
+        eng = self.eng
+        ph = phases[j]
+        self.stage[i] = j
+        link = eng.links[ph.store]
+        is_sync = ph.store == "param"
+        cap = (eng.net_cap[self.w.members.start + i]
+               if ph.store == "param" else None)
+        tr = _Transfer(link, ph.nbytes, link.latency_s * max(ph.requests, 1),
+                       self.cbs[i], is_sync, cap_gbps=cap)
+        self.trs[i] = tr
+        if is_sync:
+            eng._sync_on()
+        eng._begin_setup(self.w, tr)
+
+    def _xfer_done(self, i: int):
+        eng = self.eng
+        j = self.stage[i] + 1
+        if self.trs[i].is_sync:
+            # _sync_off inlined: only 1 -> 0 closes the interval
+            eng._sync_active -= 1
+            if eng._sync_active == 0:
+                eng.domain._sync_off(eng)
+        eng._levents += 1
+        if j >= len(self.phases):        # inlined arrival (the hot case)
+            self.stage[i] = _FAN_ARRIVED
+            self.trs[i] = None
+            self.arrived += 1
+            if self.arrived == self.m:
+                self._merge()
+            return
+        self._advance(i, j)
+
+    def _merge(self):
+        w = self.w
+        w.activity = None
+        self.eng._barrier((self.bar_name, w.it), w, self.cont)
+
+    # -- preemption ----------------------------------------------------------
+    def pause(self):
+        """Duration-cap preemption: every member keeps its progress —
+        compute remainders are measured now, in-flight transfers detach
+        with their drained bytes (arrived members have nothing open)."""
+        eng = self.eng
+        now = eng.now
+        self.gen += 1                   # stale the scheduled compute ends
+        rem = self.rem = [0.0] * self.m
+        for i in range(self.m):
+            st = self.stage[i]
+            if st == _FAN_COMPUTING:
+                rem[i] = max(self.t_end[i] - now, 0.0)
+                tr = self.trs[i]
+                if tr is not None:
+                    tr.token += 1       # stale the pre-pushed setup event
+            elif st >= 0:
+                eng._detach_transfer(self.trs[i])
+
+    def resume(self):
+        eng = self.eng
+        w = self.w
+        w.activity = ("fanout", self)
+        self.gen += 1
+        gen = self.gen
+        now = eng.now
+        rem = self.rem
+        self.rem = None
+        fn = eng._fan_compute_done
+        dom = eng.domain
+        seq = dom._seq
+        setup_done = dom._setup_done
+        evs = []
+        for i in range(self.m):
+            st = self.stage[i]
+            if st == _FAN_COMPUTING:
+                te = now + rem[i]
+                self.t_end[i] = te
+                evs.append((te, next(seq), fn, (self, i, gen)))
+                tr = self.trs[i]
+                if tr is not None and tr.latency_left > 0.0:
+                    evs.append((te + tr.latency_left, next(seq), setup_done,
+                                (tr, tr.token)))
+            elif st >= 0:
+                eng._reattach_transfer(w, self.trs[i])
+        if evs:
+            dom._q.push_bulk(evs)
+
+
 class EventEngine:
     """Run one epoch of ``workload`` under deployment ``(n, memory_mb)``
     — or a heterogeneous ``fleet`` — as a discrete-event simulation. See
@@ -628,9 +1248,12 @@ class EventEngine:
     ``record_trace=False`` skips trace accumulation (perf runs);
     ``trace_enabled`` is the accepted legacy alias. ``coalesce`` controls
     lockstep-cohort batching: ``None`` auto-enables it exactly when it is
-    provably exact (homogeneous fleet, bsp, zero variance, zero failures,
-    no shocks, unpipelined plan), ``True`` demands it (ValueError if the
-    configuration diverges), ``False`` forces per-worker simulation."""
+    provably exact (bsp, zero failures, no shocks, unpipelined plan;
+    cohorts cut at every fleet/plan non-uniformity, and σ>0 additionally
+    requires the ``_FanoutWindow`` regime — traces off, a bsp re-merge
+    barrier, no cpu_s inside the window), ``True`` demands it
+    (ValueError if the configuration diverges), ``False`` forces
+    per-worker simulation."""
 
     def __init__(self, workload: Workload, scheme: CommLike, n_workers: int,
                  memory_mb: float, global_batch: int,
@@ -744,9 +1367,12 @@ class EventEngine:
             coalesce = eligible
         elif coalesce and not eligible:
             raise ValueError(
-                "coalesce=True requires the deterministic lockstep regime: "
-                "homogeneous fleet, bsp, straggler_sigma=0, failure_rate=0, "
-                "no shocks, unpipelined plan")
+                "coalesce=True requires the lockstep-cohort regime: bsp, "
+                "failure_rate=0, no shocks, unpipelined plan; a "
+                "heterogeneous fleet needs record_trace=False, and "
+                "straggler_sigma>0 additionally needs a bsp barrier in "
+                "the plan, no cpu_s before it, and a single cohort when "
+                "on_iteration is set")
         self.coalesced = coalesce
         self._workers = [_WorkerState(g) for g in self._cohorts(coalesce)]
         self._draws = _FleetDraws(self.n, self.sigma, self.failure_rate,
@@ -773,30 +1399,68 @@ class EventEngine:
         self._min_it = 0
         self._unfinished = self.n
         # union of time any gradient-sync transfer is outstanding — the
-        # param store's keep-alive window (matches the analytic sync_s)
+        # param store's keep-alive window (matches the analytic sync_s).
+        # Accounted as closed [on, off) intervals reported to the domain
+        # on 0<->1 transitions of the outstanding count.
         self._sync_active = 0
         self._sync_busy = 0.0
+        self._sync_t0 = 0.0
+        self._sid = id(self.param_store)
         self._wall = 0.0
         self._result: Optional[EngineResult] = None
 
     def _coalesce_eligible(self) -> bool:
-        """Cohort batching is exact only when identical workers provably
-        move in lockstep: every stochastic source off, bsp barriers, a
-        homogeneous fleet, and no second activity lane."""
-        return (self.mode == "bsp" and self.sigma == 0.0
-                and self.failure_rate == 0.0 and self.shocks is None
-                and self.fleet.is_homogeneous
-                and self.plan.pipeline_depth <= 1)
+        """Cohort batching is exact only when locally-identical workers
+        provably move in lockstep between bsp barriers: no failures, no
+        shocks, no second activity lane, and cohorts cut wherever the
+        fleet or the plan stops being uniform. σ=0 cohorts never diverge
+        at all; σ>0 cohorts diverge only inside the per-iteration
+        straggler window, which ``_FanoutWindow`` simulates per member
+        (see its docstring for the exactness argument)."""
+        if not (self.mode == "bsp" and self.failure_rate == 0.0
+                and self.shocks is None and self.plan.pipeline_depth <= 1):
+            return False
+        if self.sigma == 0.0:
+            # a heterogeneous fleet coalesces only in perf runs: traced
+            # runs keep the per-worker link decomposition observable
+            return self.fleet.is_homogeneous or not self.trace_enabled
+        return self._fanout_eligible()
+
+    def _fanout_eligible(self) -> bool:
+        """The σ>0 fan-out window additionally needs: traces off (the
+        window emits no per-member trace lines), a bsp re-merge barrier
+        to exist, no post-transfer cpu segments inside the window, and —
+        when an ``on_iteration`` hook can stop the epoch mid-flight — a
+        single cohort (a stop raised while another cohort's window is
+        open would need per-member discard semantics)."""
+        if self.trace_enabled:
+            return False
+        phases = self.plan.phases
+        bar = next((i for i, ph in enumerate(phases) if ph.barrier_after),
+                   None)
+        if bar is None:
+            return False
+        if any(ph.cpu_s > 0.0 for ph in phases[:bar + 1]):
+            return False
+        if self.on_iteration is not None and len(self._cohorts(True)) > 1:
+            return False
+        return True
 
     def _cohorts(self, coalesce: bool) -> List[range]:
         if not coalesce:
             return [range(i, i + 1) for i in range(self.n)]
-        # split only where plan participation diverges: workers on the
-        # same side of every phase's fan_in follow identical paths
-        cuts = sorted({min(ph.fan_in, self.n)
-                       for ph in self.plan.phases} | {self.n})
+        # split where plan participation diverges (workers on the same
+        # side of every phase's fan_in follow identical paths) and where
+        # the fleet stops being locally identical: one spec and one
+        # per-iteration base compute time per cohort (load-aware shard
+        # placement can split a tier's batch unevenly)
+        cuts = {min(ph.fan_in, self.n) for ph in self.plan.phases} | {self.n}
+        specs = self.fleet.workers
+        base = self.base_compute_s
+        cuts.update(i for i in range(1, self.n)
+                    if specs[i] != specs[i - 1] or base[i] != base[i - 1])
         groups, prev = [], 0
-        for c in cuts:
+        for c in sorted(cuts):
             if c > prev:
                 groups.append(range(prev, c))
                 prev = c
@@ -834,23 +1498,15 @@ class EventEngine:
             if key in self.object_store.blobs:
                 self.object_store.get(key, nbytes=self.ckpt_bytes)
 
-    def _reschedule(self, link: SharedLink):
-        """Flow set changed: invalidate outstanding completion predictions
-        and schedule the next one at the new processor-sharing rates."""
-        link.generation += 1
-        if not link.flows:
-            return
-        t_next = self.now + link.next_completion_dt()
-        self.domain.at2(t_next, self._link_event, (link, link.generation))
+    def _sync_on(self):
+        self._sync_active += 1
+        if self._sync_active == 1:
+            self.domain._sync_on(self)
 
-    def _link_event(self, payload):
-        link, gen = payload
-        if gen != link.generation:
-            return                               # stale prediction
-        done = link.take_drained(_EPS_GB)
-        self._reschedule(link)
-        for tr in done:
-            tr.cb()
+    def _sync_off(self):
+        self._sync_active -= 1
+        if self._sync_active == 0:
+            self.domain._sync_off(self)
 
     def _make_transfer(self, w: _WorkerState, store: str, nbytes: float,
                        requests: int, done: Callable,
@@ -864,14 +1520,14 @@ class EventEngine:
 
         def finished():
             if is_sync:
-                self._sync_active -= 1
+                self._sync_off()
             done()
 
         cap = self.net_cap[w.wid] if store == "param" else None
         tr = _Transfer(link, nbytes, link.latency_s * max(requests, 1),
                        finished, is_sync, cap_gbps=cap, weight=weight)
         if is_sync:
-            self._sync_active += 1
+            self._sync_on()
         return tr
 
     def _start_transfer(self, w: _WorkerState, store: str, nbytes: float,
@@ -891,25 +1547,11 @@ class EventEngine:
         tr.token += 1
         if tr.latency_left > 0:
             link.setup += 1
-            self.domain.at2(self.now + tr.latency_left, self._setup_done,
-                            (tr, tr.token))
+            self.domain.at2(self.now + tr.latency_left,
+                            self.domain._setup_done, (tr, tr.token))
         else:
-            link.add_flow(tr)        # resume directly into the flow
-            self._reschedule(link)
-
-    def _setup_done(self, payload):
-        tr, token = payload
-        if token != tr.token:
-            return                               # paused during setup
-        link = tr.link
-        link.setup -= 1
-        tr.latency_left = 0.0
-        if tr.remaining_gb <= _EPS_GB:
-            self._reschedule(link)               # busy-window bookkeeping
-            tr.cb()                              # cb releases the activity slot
-            return
-        link.add_flow(tr)
-        self._reschedule(link)
+            link.add_flow(tr, self.now)  # resume directly into the flow
+            self.domain._relink(link)
 
     def _do_compute(self, w: _WorkerState, duration: float, cont: Callable,
                     redo: Optional[Callable] = None):
@@ -954,8 +1596,8 @@ class EventEngine:
         # the usable window opens once init/restore completes
         cont, w.inv_cont = w.inv_cont, None
         w.cap_gen += 1
-        self.domain.at2(self.now + self.usable_s, self._cap_fire,
-                        (w, w.cap_gen))
+        w.cap_t = self.now + self.usable_s
+        self.domain.at2(w.cap_t, self._cap_fire, (w, w.cap_gen))
         self._levents += w.count
         cont()
 
@@ -972,17 +1614,19 @@ class EventEngine:
 
     def _detach_transfer(self, tr: _Transfer):
         """Remove a transfer from its link (setup or flow phase) and fix
-        the sync-window counter. The transfer keeps its progress."""
+        the sync-window counter. The transfer keeps its progress: only
+        *this* flow's remaining_gb is materialized (class-tracked links
+        never touch the other flows)."""
         tr.token += 1                            # cancel pending setup
         link = tr.link
         if tr.fid in link.flows:                 # mid-flow
-            link.remove_flow(tr)                 # materializes remaining_gb
-            self._reschedule(link)
+            link.remove_flow(tr, self.now)
+            self.domain._relink(link)
             tr.latency_left = 0.0
         else:
             link.setup -= 1
         if tr.is_sync:
-            self._sync_active -= 1
+            self._sync_off()
 
     def _pause_activity(self, w: _WorkerState):
         """Capture whatever the worker is doing as a resumable pending
@@ -1007,11 +1651,15 @@ class EventEngine:
             _, pr = act
             pr.pause()                           # both lanes keep progress
             w.pending = pr.resume
+        elif kind == "fanout":
+            _, win = act
+            win.pause()                          # every member keeps progress
+            w.pending = win.resume
 
     def _reattach_transfer(self, w: _WorkerState, tr: _Transfer):
         """Put a detached transfer back on its link (keeping progress)."""
         if tr.is_sync:
-            self._sync_active += 1
+            self._sync_on()
         self._begin_setup(w, tr)
 
     def _resume_transfer(self, w: _WorkerState, tr: _Transfer):
@@ -1021,6 +1669,32 @@ class EventEngine:
     def _pipe_seg_done(self, payload):
         pr, gen = payload
         pr._seg_done(gen)
+
+    def _fan_compute_done(self, payload):
+        # _FanoutWindow._compute_done, inlined into the dispatch target:
+        # one frame per member-compute event instead of two
+        win, i, gen = payload
+        if gen != win.gen:
+            return
+        self._levents += 1
+        win.pending -= 1
+        tr = win.trs[i]
+        if tr is None:
+            win._advance(i, 0)           # no participating phases: arrive
+            return
+        win.stage[i] = 0
+        if tr.is_sync:
+            # _sync_on inlined: only the 0 -> 1 transition leaves the fast
+            # path (opens the domain keep-alive interval)
+            self._sync_active += 1
+            if self._sync_active == 1:
+                self.domain._sync_on(self)
+        if tr.latency_left > 0.0:
+            tr.link.setup += 1           # setup event was pre-pushed
+        else:
+            link = tr.link
+            link.add_flow(tr, self.now)
+            self.domain._relink(link)
 
     def _cap_fire(self, payload):
         w, gen = payload
@@ -1180,6 +1854,15 @@ class EventEngine:
         self._compute_phase(w)
 
     def _compute_phase(self, w: _WorkerState):
+        if self.coalesced and self.sigma > 0.0:
+            # σ>0 cohort: members diverge here and re-merge at the first
+            # bsp barrier — the fan-out window runs that stretch per
+            # member with one bulk event push (eligibility was proven at
+            # construction)
+            win = w.fan
+            if win is None:
+                win = w.fan = _FanoutWindow(self, w)
+            return win.start()
         k = w.draws
         w.draws = k + 1
         factor = self._draws.factor(w.wid, k)
@@ -1512,6 +2195,8 @@ class ServingJob:
         # ContentionDomain engine interface (sync-union accounting)
         self._sync_active = 0
         self._sync_busy = 0.0
+        self._sync_t0 = 0.0
+        self._sid = id(self.param_store)
         self._result: Optional[ServingResult] = None
 
     # -- primitives ----------------------------------------------------------
@@ -1519,21 +2204,15 @@ class ServingJob:
     def now(self) -> float:
         return self.domain.now
 
-    def _reschedule(self, link: SharedLink):
-        link.generation += 1
-        if not link.flows:
-            return
-        t_next = self.now + link.next_completion_dt()
-        self.domain.at2(t_next, self._link_event, (link, link.generation))
+    def _sync_on(self):
+        self._sync_active += 1
+        if self._sync_active == 1:
+            self.domain._sync_on(self)
 
-    def _link_event(self, payload):
-        link, gen = payload
-        if gen != link.generation:
-            return
-        done = link.take_drained(_EPS_GB)
-        self._reschedule(link)
-        for tr in done:
-            tr.cb()
+    def _sync_off(self):
+        self._sync_active -= 1
+        if self._sync_active == 0:
+            self.domain._sync_off(self)
 
     def _transfer(self, store: str, nbytes: float, cont: Callable,
                   is_sync: bool):
@@ -1543,35 +2222,21 @@ class ServingJob:
 
         def finished():
             if is_sync:
-                self._sync_active -= 1
+                self._sync_off()
             cont()
 
         cap = self.net_cap if store == "param" else None
         tr = _Transfer(link, nbytes, link.latency_s, finished, is_sync,
                        cap_gbps=cap, prio=self.link_priority)
         if is_sync:
-            self._sync_active += 1
+            self._sync_on()
         if tr.latency_left > 0:
             link.setup += 1
-            self.domain.at2(self.now + tr.latency_left, self._setup_done,
-                            (tr, tr.token))
+            self.domain.at2(self.now + tr.latency_left,
+                            self.domain._setup_done, (tr, tr.token))
         else:
-            link.add_flow(tr)
-            self._reschedule(link)
-
-    def _setup_done(self, payload):
-        tr, token = payload
-        if token != tr.token:
-            return
-        link = tr.link
-        link.setup -= 1
-        tr.latency_left = 0.0
-        if tr.remaining_gb <= _EPS_GB:
-            self._reschedule(link)
-            tr.cb()
-            return
-        link.add_flow(tr)
-        self._reschedule(link)
+            link.add_flow(tr, self.now)
+            self.domain._relink(link)
 
     def _bill(self, duration_s: float, request: bool):
         """Accrue GB-seconds (and optionally one Lambda request) both on
@@ -1594,14 +2259,15 @@ class ServingJob:
         self._t0 = self.now
         if len(self.arrivals) == 0:
             return self._finish()
-        self.domain.at2(self._t0 + self.arrivals[0], self._arrive, 0)
+        # bulk-push the whole arrival slab in one calendar insert rather
+        # than chaining arrival k -> arrival k+1 one event at a time
+        t0, arrive = self._t0, self._arrive
+        self.domain.at2_bulk([(t0 + a, arrive, k)
+                              for k, a in enumerate(self.arrivals.tolist())])
 
     def _arrive(self, k: int):
         self._delivered = k + 1
         self._levents += 1
-        if k + 1 < len(self.arrivals):
-            self.domain.at2(self._t0 + self.arrivals[k + 1],
-                            self._arrive, k + 1)
         self._dispatch()
 
     # -- dynamic batching + admission ----------------------------------------

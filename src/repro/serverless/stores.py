@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Any, Dict, List, Optional, Tuple
 
 # Pricing (us-east-1, 2022)
@@ -31,6 +32,47 @@ class TransferStats:
     gets: int = 0
     bytes_in: float = 0.0
     bytes_out: float = 0.0
+
+
+class _FlowClass:
+    """One ``(cap, prio)`` equivalence class of flows on a SharedLink.
+
+    Water-filling assigns every member stream of a class the same rate
+    (flows with equal cap and priority are interchangeable claimants), so
+    the class — not the flow — is the unit of incremental accounting: a
+    single virtual-work integral ``served`` (GB delivered per member
+    stream since the class was created) advances at ``rate`` per second,
+    and a flow added at served-level S with R GB left drains when
+    ``served`` reaches its target S + R. Targets live in a lazy-deletion
+    min-heap, making membership changes O(log K-ish) with no per-flow
+    touch-up on clock advances.
+
+    ``pred_t``/``pred_id`` belong to the event engine's lazy completion
+    re-prediction: the earliest pending ``CalendarQueue`` prediction for
+    this class and its staleness stamp (see ``ContentionDomain._relink``).
+    """
+
+    __slots__ = ("cap", "prio", "n", "w", "served", "rate", "target",
+                 "heap", "pred_t", "pred_id")
+
+    def __init__(self, cap: float, prio: float):
+        self.cap = cap
+        self.prio = prio
+        self.n = 0                    # flows currently in the class
+        self.w = 0                    # member streams (sum of flow weights)
+        self.served = 0.0             # GB delivered per member stream
+        self.rate = 0.0               # current per-member rate (GB/s)
+        self.target: Dict[int, float] = {}   # fid -> drain served-level
+        self.heap: List[Tuple[float, int]] = []
+        self.pred_t = math.inf        # earliest pending drain prediction
+        self.pred_id = 0              # invalidates stale predictions
+
+
+def _class_order(c: _FlowClass) -> Tuple[float, float, float]:
+    """Water-filling visit order: ascending cap-to-claim ratio (a class
+    whose cap binds below its proportional share releases the excess to
+    everyone behind it). The (cap, prio) tail makes the order total."""
+    return (c.cap / c.prio, c.cap, c.prio)
 
 
 class SharedLink:
@@ -51,36 +93,39 @@ class SharedLink:
     by *several* engines in a ``ContentionDomain`` — cross-job transfers
     then slow each other by their actual overlap. (Keep-alive billing is
     the engine's job: it tracks the union of time gradient-sync transfers
-    are outstanding, across links.)"""
+    are outstanding, across links.)
+
+    Flows added through ``add_flow`` are grouped into K equivalence
+    **classes** keyed by ``(cap, prio)`` — K = tiers x priorities, small
+    and bounded — and water-filling runs over the classes instead of the
+    n flows. Each class keeps its own served-integral and lazy-deletion
+    drain heap, so ``add_flow``/``remove_flow``/``take_drained`` are
+    O(log K) and a clock advance is O(K) regardless of flow count: mixed
+    -cap fleets and priority-carrying serving fetches ride the same
+    incremental path a uniform fleet does. Flows injected directly into
+    ``flows`` (tests, external tools) fall back to materialized per-flow
+    accounting; ``incremental=False`` forces that fallback everywhere
+    (the property-test reference)."""
 
     def __init__(self, name: str, aggregate_gbps: float,
-                 per_stream_gbps: float, latency_s: float):
+                 per_stream_gbps: float, latency_s: float,
+                 incremental: bool = True):
         self.name = name
         self.aggregate_gbps = aggregate_gbps
         self.per_stream_gbps = per_stream_gbps
         self.latency_s = latency_s
+        self.incremental = incremental
         self.flows: Dict[int, Any] = {}      # fid -> transfer (remaining_gb)
         self.setup = 0                       # transfers in the latency phase
         self.generation = 0                  # bumped on any flow-set change
         self.last_t = 0.0
         self._rates_key = None               # (generation, len) of the cache
         self._rates: Dict[int, float] = {}
-        # incremental uniform-cap fast path (see add_flow): while every
-        # flow has the same cap, all flows drain at one shared per-member
-        # rate, so the link tracks a single virtual-work integral
-        # ``_served`` (GB delivered per member stream) instead of touching
-        # every flow on every clock advance. A flow added at served-level
-        # S with R GB left drains when ``_served`` reaches its target
-        # S + R; targets live in a lazy-deletion heap, making progress()
-        # O(1) and next_completion_dt()/take_drained() O(log n).
-        self._served = 0.0
-        self._uniform_r = 0.0                # shared per-member rate
-        self._target: Dict[int, float] = {}  # fid -> drain served-level
-        self._theap: List[Tuple[float, int]] = []
-        # uniformity is judged on (cap, prio) pairs: the fast path needs
-        # every member stream to drain at one shared rate
-        self._cap_counts: Dict[Tuple[float, float], int] = {}
-        self._total_w = 0
+        self.classes: Dict[Tuple[float, float], _FlowClass] = {}
+        self._active = 0                     # classes with n > 0
+        self._ntracked = 0                   # flows owned by a class
+        self._total_w = 0                    # member streams, all classes
+        self.cascade = None                  # sole fan-out window (engine opt)
 
     def _cap(self, tr: Any) -> float:
         return getattr(tr, "cap_gbps", None) or self.per_stream_gbps
@@ -94,77 +139,130 @@ class SharedLink:
         return getattr(tr, "prio", 1.0) or 1.0
 
     def _tracked(self) -> bool:
-        """True while every current flow was added via ``add_flow`` and
-        caps are uniform — the O(1)/O(log n) accounting is valid. Flows
-        injected directly into ``flows`` (tests, external tools) simply
-        fall back to the materialized per-flow path."""
-        return len(self._target) == len(self.flows) > 0
+        """True while every current flow was added via ``add_flow`` — the
+        O(K) class accounting is valid. Flows injected directly into
+        ``flows`` (tests, external tools) simply fall back to the
+        materialized per-flow path."""
+        return self._ntracked == len(self.flows) > 0
 
     # -- incremental flow-set maintenance (engine fast path) -----------------
-    def add_flow(self, tr: Any):
-        """Register a flow, keeping the uniform-mode accounting current.
-        ``tr.remaining_gb`` must be up to date (it is captured into the
-        drain target here)."""
-        cap = self._cap(tr)
-        key = (cap, self._prio(tr))
-        was_uniform = self._tracked() or not self.flows
-        self.flows[tr.fid] = tr
-        self._cap_counts[key] = self._cap_counts.get(key, 0) + 1
-        self._total_w += getattr(tr, "weight", 1)
-        if len(self._cap_counts) == 1:
-            # equal priorities cancel in the proportional share, so the
-            # uniform per-member rate is the classic one
-            if was_uniform:
-                tgt = self._served + tr.remaining_gb
-                self._target[tr.fid] = tgt
-                heapq.heappush(self._theap, (tgt, tr.fid))
+    def add_flow(self, tr: Any, now: Optional[float] = None):
+        """Register a flow in its ``(cap, prio)`` class. ``tr.remaining_gb``
+        must be up to date (it is captured into the drain target here).
+        Passing ``now`` advances the link first, so the capture is taken
+        at the current instant. Returns the flow's class when the
+        incremental path took it (None on the materialized fallback) —
+        callers use it to re-key only that class's drain prediction."""
+        if now is not None and now != self.last_t:
+            if self._active == 1 and self._ntracked == len(self.flows):
+                # single-class advance inline (identical arithmetic to
+                # progress(); the one active class is found by scan, K≤2)
+                for c in self.classes.values():
+                    if c.n:
+                        c.served += c.rate * (now - self.last_t)
+                        break
+                self.last_t = now
             else:
-                self._enter_uniform()
-            self._uniform_r = min(cap, self.aggregate_gbps / self._total_w)
-        elif self._target:
-            self._materialize_all()
-
-    def remove_flow(self, tr: Any):
-        """Drop a flow, materializing its ``remaining_gb`` first (pause /
-        checkpoint paths read it)."""
+                self.progress(now)
+        flows = self.flows
+        was_tracked = not flows or self._ntracked == len(flows)
         fid = tr.fid
-        tgt = self._target.pop(fid, None)
-        if tgt is not None:
-            tr.remaining_gb = max(tgt - self._served, 0.0)
+        flows[fid] = tr
+        self.generation += 1
+        w = tr.weight
+        self._total_w += w
+        if not (self.incremental and was_tracked):
+            return                           # materialized fallback
+        key = (tr.cap_gbps or self.per_stream_gbps, tr.prio or 1.0)
+        c = self.classes.get(key)
+        if c is None:
+            c = self.classes[key] = _FlowClass(*key)
+        if c.n == 0:
+            self._active += 1
+        c.n += 1
+        c.w += w
+        tgt = c.served + tr.remaining_gb
+        c.target[fid] = tgt
+        heapq.heappush(c.heap, (tgt, fid))
+        self._ntracked += 1
+        if self._active == 1:
+            # single-class refresh inline: c is the one active class and
+            # this is the classic processor-sharing formula (identical
+            # arithmetic to _refresh_rates)
+            c.rate = min(c.cap, self.aggregate_gbps / self._total_w)
+        else:
+            self._refresh_rates()
+        return c
+
+    def remove_flow(self, tr: Any, now: Optional[float] = None):
+        """Drop a flow, materializing *its own* ``remaining_gb`` (pause /
+        checkpoint paths read it). The rest of the flow set is untouched —
+        no whole-set materialization."""
+        if now is not None and now != self.last_t:
+            self.progress(now)
+        fid = tr.fid
         del self.flows[fid]
+        self.generation += 1
+        w = getattr(tr, "weight", 1)
+        self._total_w -= w
         key = (self._cap(tr), self._prio(tr))
-        c = self._cap_counts.get(key, 0) - 1
-        if c > 0:
-            self._cap_counts[key] = c
-        elif key in self._cap_counts:
-            del self._cap_counts[key]
-        self._total_w -= getattr(tr, "weight", 1)
-        if not self.flows:
-            self._target.clear()
-            self._theap.clear()
-            self._uniform_r = 0.0
-        elif len(self._cap_counts) == 1:
-            if not self._target:
-                self._enter_uniform()
-            cap0 = next(iter(self._cap_counts))[0]
-            self._uniform_r = min(cap0, self.aggregate_gbps / self._total_w)
+        c = self.classes.get(key)
+        if c is None or fid not in c.target:
+            return                           # untracked flow
+        tgt = c.target.pop(fid)
+        tr.remaining_gb = max(tgt - c.served, 0.0)
+        self._ntracked -= 1
+        c.n -= 1
+        c.w -= w
+        if c.n == 0:
+            self._active -= 1
+            c.heap.clear()
+            c.pred_t = math.inf
+            c.pred_id += 1                   # stale any pending prediction
+        if self._active:
+            self._refresh_rates()
+
+    def _refresh_rates(self):
+        """Recompute every active class's per-member rate (rates change
+        exactly when the flow set does). O(K log K) worst case; the
+        single-class common case is the classic processor-sharing
+        formula, no sort."""
+        agg = self.aggregate_gbps
+        if self._active == 1:
+            for c in self.classes.values():
+                if c.n:
+                    # equal priorities cancel in the proportional share
+                    c.rate = min(c.cap, agg / self._total_w)
+                    return
+            return
+        active = sorted((c for c in self.classes.values() if c.n),
+                        key=_class_order)
+        remaining = agg
+        claims = sum(c.w * c.prio for c in active)
+        for c in active:
+            r = min(c.cap, c.prio * remaining / claims)
+            c.rate = r
+            remaining -= r * c.w
+            claims -= c.w * c.prio
 
     def take_drained(self, eps_gb: float = 1e-12) -> List[Any]:
         """Pop and return every flow whose remainder is within ``eps_gb``
         of drained (``remaining_gb`` is zeroed/materialized). O(k log n)
-        in uniform mode, O(n) otherwise."""
+        in class mode, O(n) in the materialized fallback."""
         out: List[Any] = []
         if self._tracked():
-            heap, target = self._theap, self._target
-            while heap:
-                tgt, fid = heap[0]
-                if target.get(fid) != tgt:
-                    heapq.heappop(heap)          # stale (removed/re-added)
-                    continue
-                if tgt - self._served > eps_gb:
-                    break
-                out.append(self.flows[fid])
-                self.remove_flow(self.flows[fid])
+            for c in list(self.classes.values()):
+                heap, target = c.heap, c.target
+                while heap:
+                    tgt, fid = heap[0]
+                    if target.get(fid) != tgt:
+                        heapq.heappop(heap)      # stale (removed/re-added)
+                        continue
+                    if tgt - c.served > eps_gb:
+                        break
+                    tr = self.flows[fid]
+                    out.append(tr)
+                    self.remove_flow(tr)
         else:
             out = [tr for tr in self.flows.values()
                    if tr.remaining_gb <= eps_gb]
@@ -172,37 +270,13 @@ class SharedLink:
                 self.remove_flow(tr)
         return out
 
-    def _enter_uniform(self):
-        """Caps just became uniform: snapshot every flow's (materialized)
-        remainder into a drain target."""
-        self._target.clear()
-        heap = []
-        served = self._served
-        for fid, tr in self.flows.items():
-            tgt = served + tr.remaining_gb
-            self._target[fid] = tgt
-            heap.append((tgt, fid))
-        heapq.heapify(heap)
-        self._theap = heap
-
-    def _materialize_all(self):
-        """Caps diverged: flush virtual-work progress into every flow's
-        ``remaining_gb`` and fall back to per-flow accounting."""
-        served = self._served
-        for fid, tr in self.flows.items():
-            tgt = self._target.get(fid)
-            if tgt is not None:
-                tr.remaining_gb = max(tgt - served, 0.0)
-        self._target.clear()
-        self._theap.clear()
-
     def rates(self) -> Dict[int, float]:
-        """Max-min fair (water-filling) rate per flow id. Visiting flows
-        narrowest-cap first, each takes ``min(cap, remaining / members
-        left)`` — a capped flow's unused equal share waterfalls to the
-        wider flows behind it. Rates only change when the flow set does
-        (every mutation bumps ``generation``), so the allocation is
-        cached per (generation, flow count).
+        """Max-min fair (water-filling) rate per flow id. Visiting classes
+        narrowest-cap first, each takes ``min(cap, share left)`` — a
+        capped class's unused equal share waterfalls to the wider classes
+        behind it. Rates only change when the flow set does (every
+        mutation bumps ``generation``), so the allocation is cached per
+        (generation, flow count).
 
         A flow may carry ``weight`` member streams (a coalesced worker
         cohort): it counts as ``weight`` equal claimants on the link and
@@ -211,46 +285,58 @@ class SharedLink:
         may also carry ``prio`` (default 1.0): each of its member streams
         claims ``prio`` shares, so under contention it holds a
         ``prio``-weighted fraction of the aggregate (still bounded by its
-        own cap, and still spilling unused share to the others)."""
+        own cap, and still spilling unused share to the others).
+
+        The materialized fallback (directly-injected flows) groups the
+        flow set by ``(cap, prio)`` and runs the *same* class-sequence
+        arithmetic, so class-mode and materialized rates are bit-equal
+        for identical flow sets."""
         key = (self.generation, len(self.flows))
         if key == self._rates_key:
             return self._rates
         if self._tracked():
-            r = self._uniform_r
-            out = dict.fromkeys(self.flows, r)
+            classes = self.classes
+            default_cap = self.per_stream_gbps
+            out = {}
+            for fid, tr in self.flows.items():
+                k = (getattr(tr, "cap_gbps", None) or default_cap,
+                     self._prio(tr))
+                out[fid] = classes[k].rate
             self._rates_key, self._rates = key, out
             return out
-        flows = list(self.flows.values())
+        # materialized fallback: group by (cap, prio), then the identical
+        # per-class water-filling sequence
+        groups: Dict[Tuple[float, float], list] = {}
         default_cap = self.per_stream_gbps
-        caps = [getattr(tr, "cap_gbps", None) or default_cap for tr in flows]
-        wgts = [getattr(tr, "weight", 1) for tr in flows]
-        prios = [self._prio(tr) for tr in flows]
-        left = sum(wgts)
-        cap0, prio0 = caps[0], prios[0]
-        if (all(c == cap0 for c in caps)
-                and all(p == prio0 for p in prios)):
-            # uniform caps + priorities (the homogeneous-fleet common
-            # case): water-filling degenerates to classic processor
-            # sharing — either every flow is cap-bound or every flow takes
-            # an equal share; no sort needed (equal priorities cancel)
-            r = min(cap0, self.aggregate_gbps / left)
-            out = {tr.fid: r for tr in flows}
+        total_w = 0
+        for tr in self.flows.values():
+            k = (getattr(tr, "cap_gbps", None) or default_cap,
+                 self._prio(tr))
+            w = getattr(tr, "weight", 1)
+            total_w += w
+            g = groups.get(k)
+            if g is None:
+                groups[k] = [w, [tr.fid]]
+            else:
+                g[0] += w
+                g[1].append(tr.fid)
+        out = {}
+        if len(groups) == 1:
+            (cap0, _prio0), (_w, fids) = next(iter(groups.items()))
+            r = min(cap0, self.aggregate_gbps / total_w)
+            out = dict.fromkeys(fids, r)
         else:
-            # weighted max-min: each member stream claims ``prio`` shares;
-            # visiting flows by ascending cap-to-claim ratio, a flow whose
-            # cap binds below its proportional share releases the excess
-            # to everyone behind it
-            order = sorted(range(len(flows)),
-                           key=lambda i: (caps[i] / prios[i], flows[i].fid))
-            out = {}
+            order = sorted(groups.items(),
+                           key=lambda kv: (kv[0][0] / kv[0][1],
+                                           kv[0][0], kv[0][1]))
             remaining = self.aggregate_gbps
-            claims = sum(w * p for w, p in zip(wgts, prios))
-            for i in order:
-                wgt = wgts[i]
-                r = min(caps[i], prios[i] * remaining / claims)
-                out[flows[i].fid] = r
-                remaining -= r * wgt
-                claims -= wgt * prios[i]
+            claims = sum(w * k[1] for k, (w, _f) in order)
+            for (cap, prio), (w, fids) in order:
+                r = min(cap, prio * remaining / claims)
+                for fid in fids:
+                    out[fid] = r
+                remaining -= r * w
+                claims -= w * prio
         self._rates_key, self._rates = key, out
         return out
 
@@ -258,10 +344,17 @@ class SharedLink:
         """Time until the first flow drains at the current per-flow rates.
         (``remaining_gb`` is per member, as is the rate.)"""
         if self._tracked():
-            heap, target = self._theap, self._target
-            while heap and target.get(heap[0][1]) != heap[0][0]:
-                heapq.heappop(heap)              # lazy-deleted entries
-            return max(heap[0][0] - self._served, 0.0) / self._uniform_r
+            best = math.inf
+            for c in self.classes.values():
+                if not c.n:
+                    continue
+                heap, target = c.heap, c.target
+                while heap and target.get(heap[0][1]) != heap[0][0]:
+                    heapq.heappop(heap)          # lazy-deleted entries
+                dt = max(heap[0][0] - c.served, 0.0) / c.rate
+                if dt < best:
+                    best = dt
+            return best
         rates = self.rates()
         return min(tr.remaining_gb / rates[tr.fid]
                    for tr in self.flows.values())
@@ -269,12 +362,14 @@ class SharedLink:
     def progress(self, now: float):
         """Advance all flows to ``now`` at the rates that held since the
         last flow-set change (rates only change when the set does). In
-        uniform mode only the shared virtual-work integral advances —
-        O(1) regardless of flow count."""
+        class mode only the per-class virtual-work integrals advance —
+        O(K) regardless of flow count."""
         dt = now - self.last_t
         if dt > 0 and self.flows:
-            if self._tracked():
-                self._served += self._uniform_r * dt
+            if self._ntracked == len(self.flows):
+                for c in self.classes.values():
+                    if c.n:
+                        c.served += c.rate * dt
             else:
                 rates = self.rates()
                 for tr in self.flows.values():
