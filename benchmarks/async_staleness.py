@@ -56,7 +56,7 @@ def summarize(rows) -> str:
     return (f"sigma={SIGMA}: async {a['speedup_vs_bsp']:.2f}x bsp; "
             f"ssp(k={best_ssp['staleness_k']}) reaches "
             f"{best_ssp['speedup_vs_bsp'] / a['speedup_vs_bsp']:.0%} of "
-            f"async at bounded staleness")
+            "async at bounded staleness")
 
 
 if __name__ == "__main__":

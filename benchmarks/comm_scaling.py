@@ -37,7 +37,7 @@ def summarize(rows) -> str:
             worst[r["workload"]] = max(worst.get(r["workload"], 0),
                                        r["comm_s"])
     sp = [worst[k] / smlt[k] for k in smlt]
-    return (f"comm speedup vs worst baseline @200 workers: "
+    return ("comm speedup vs worst baseline @200 workers: "
             f"min {min(sp):.1f}x max {max(sp):.1f}x")
 
 

@@ -6,7 +6,7 @@ import os
 import time
 from typing import Dict, List
 
-from repro.core import Config, ConfigSpace, EpochPlan, Goal, TaskScheduler
+from repro.core import ConfigSpace, TaskScheduler
 from repro.serverless import ObjectStore, ParamStore, ServerlessPlatform
 
 OUT_DIR = "experiments/bench"

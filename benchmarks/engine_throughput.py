@@ -296,7 +296,7 @@ def main(argv=None) -> int:
         if failures:
             return 1
         print(f"quick gate OK: all rows within {REGRESSION_TOLERANCE:.0%} "
-              f"of baseline events/sec")
+              "of baseline events/sec")
         return 0
 
     report = build_report(rows)

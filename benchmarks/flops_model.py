@@ -13,7 +13,6 @@ All quantities are PER DEVICE on the given mesh. Hardware: TPU v5e-like —
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 from repro.models import registry
 from repro.models.base import INPUT_SHAPES, ModelConfig

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Config, EpochPlan, Goal
+from repro.core import EpochPlan, Goal
 from repro.serverless import Workload
 from benchmarks.common import fresh_scheduler
 

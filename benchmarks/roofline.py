@@ -12,7 +12,6 @@ per-device argument sizes. MODEL_FLOPS = 6·N_active·D (train) or 2·N·D
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 from typing import Dict, Optional

@@ -109,7 +109,7 @@ def main():
          f"({args.model})", res2, goal2)
 
     res3, goal3 = run_workflow(args)
-    show_workflow(f"Scenario 3 — train -> fine-tune -> eval workflow under "
+    show_workflow("Scenario 3 — train -> fine-tune -> eval workflow under "
                   f"one goal (T <= {goal3.deadline_s:.0f}s, "
                   f"$ <= {goal3.budget_usd:.0f})", res3, goal3)
 

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCHS, reduced, reduced_batch
+from repro.configs import ARCHS, reduced
 from repro.core import EpochPlan, Goal
 from repro.kernels import ops, ref
 from repro.launch.train import train

@@ -89,13 +89,13 @@ def main():
     ck = DiskCheckpointer(args.ckpt_dir)
 
     batch_size = args.batch
-    t0 = time.time()
+    t0 = time.perf_counter()
     losses = []
     for i in range(args.steps):
         if i == args.steps // 3:
             batch_size *= 2  # dynamic batching: schedule doubles the batch
             print(f"step {i}: batch {args.batch} -> {batch_size} "
-                  f"(step re-lowered)")
+                  "(step re-lowered)")
         if i == args.steps // 2:
             # duration-cap simulation: checkpoint, drop state, restore
             ck.save("mid", {"params": params, "opt": opt_state},
@@ -114,10 +114,11 @@ def main():
         losses.append(float(loss))
         if i % 25 == 0 or i == args.steps - 1:
             tput = sum([args.batch] * min(i + 1, 25)) * args.seq / max(
-                time.time() - t0, 1e-9)
-            print(f"step {i:4d}  loss {losses[-1]:.4f}")
+                time.perf_counter() - t0, 1e-9)
+            print(f"step {i:4d}  loss {losses[-1]:.4f}  "
+                  f"{tput:,.0f} tok/s")
     print(f"loss: {losses[0]:.3f} -> {min(losses):.3f} "
-          f"({time.time()-t0:.0f}s total)")
+          f"({time.perf_counter()-t0:.0f}s total)")
     assert min(losses) < losses[0] - 0.5, "training must clearly progress"
     if not args.skip_serverless_sim:
         serverless_projection(cfg, args.seq, batch_size, args.steps)

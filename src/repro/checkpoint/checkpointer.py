@@ -16,7 +16,7 @@ import dataclasses
 import io
 import json
 import os
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np

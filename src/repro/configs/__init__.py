@@ -4,7 +4,7 @@ ShapeDtypeStruct stand-ins for every model input (no device allocation).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -137,10 +137,10 @@ class CommSpec:
         if self.strategy not in ("ps", "scatter_reduce", "hier"):
             raise ValueError(f"unknown comm strategy {self.strategy!r}")
         if not 0.0 < self.ratio <= 1.0:
-            raise ValueError(f"compress ratio must be in (0, 1], "
+            raise ValueError("compress ratio must be in (0, 1], "
                              f"got {self.ratio}")
         if self.pipeline_depth < 1:
-            raise ValueError(f"pipeline_depth must be >= 1, "
+            raise ValueError("pipeline_depth must be >= 1, "
                              f"got {self.pipeline_depth}")
 
 

@@ -16,12 +16,11 @@ all-gather intra-pod. All functions run inside ``shard_map``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 STRATEGIES = ("allreduce", "hier", "hier2", "hier2_q", "ps")

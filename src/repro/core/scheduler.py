@@ -21,10 +21,8 @@ one simulated fleet.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, ClassVar, Dict, FrozenSet, List, Optional, Tuple
 
-import numpy as np
 
 from repro.core.bayes_opt import BayesianOptimizer, Config, ConfigSpace
 from repro.core.comm import CommSpec, parse_scheme
@@ -65,12 +63,12 @@ class TraceEvent:
     # before it can appear in a trace, so typos fail loudly instead of
     # silently slipping past `events if e.kind == ...` filters
     KINDS: ClassVar[FrozenSet[str]] = frozenset(
-        {"epoch", "profile", "reoptimize", "reoptimize_mid"})
+        {"epoch", "reoptimize", "reoptimize_mid"})
 
     def __post_init__(self):
         if self.kind not in self.KINDS:
             raise ValueError(f"unknown TraceEvent kind: {self.kind!r} "
-                             f"(register it in TraceEvent.KINDS)")
+                             "(register it in TraceEvent.KINDS)")
 
 
 @dataclasses.dataclass

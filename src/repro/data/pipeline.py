@@ -10,9 +10,17 @@ bookkeeping guarantees (Section 4.2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Optional
 
 import numpy as np
+
+
+def _base_stream(seed: int):
+    """Deferred: ``repro.core.__init__`` reaches back into this module
+    via cost_model → serverless → arrivals, so a top-level import of
+    ``repro.core.rng`` makes ``import repro.data`` circular."""
+    from repro.core.rng import base_stream
+    return base_stream(seed)
 
 
 @dataclasses.dataclass
@@ -29,13 +37,13 @@ class TokenDataset:
 
     def __init__(self, cfg: DataConfig):
         self.cfg = cfg
-        rng = np.random.RandomState(cfg.seed)
+        rng = _base_stream(cfg.seed)
         # low-entropy transition structure: next token ~ f(prev token)
         self._shift = rng.randint(1, 17)
         self._noise = 0.1
 
     def sample(self, epoch: int, index: int, n: int, seq: int) -> np.ndarray:
-        rng = np.random.RandomState(
+        rng = _base_stream(
             (self.cfg.seed * 1_000_003 + epoch * 7919 + index) % (2 ** 31))
         start = rng.randint(0, self.cfg.vocab_size, size=(n, 1))
         steps = rng.randint(0, self.cfg.vocab_size, size=(n, seq))
@@ -85,7 +93,7 @@ class OnlineStream:
         self.base_rate = base_rate
         self.period = period_s
         self.amp = amplitude
-        self.rng = np.random.RandomState(seed)
+        self.rng = _base_stream(seed)
 
     def arrivals(self, t0: float, dt: float) -> int:
         mid = t0 + dt / 2

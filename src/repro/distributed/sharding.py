@@ -20,7 +20,7 @@ blocks/encoder/decoder/cross) keep their leading layer axis unsharded.
 from __future__ import annotations
 
 import re
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import numpy as np

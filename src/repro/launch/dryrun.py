@@ -13,15 +13,13 @@ before jax initializes devices):
 """
 import argparse
 import json
-import re
 import time
 import traceback
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import ARCHS, batch_extras, input_specs, pairs, supports
+from repro.configs import ARCHS, input_specs, pairs, supports
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (decode_cache_shapes, make_prefill_step,
                                 make_serve_step, make_train_step)
@@ -51,7 +49,7 @@ def lower_one(arch_id: str, shape_name: str, *, multi_pod: bool,
         mesh = make_custom_mesh(mesh_shape)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    t0 = time.perf_counter()
     # mesh context: bare-PartitionSpec constraints (sequence parallelism)
     # resolve against it; reset to the empty mesh afterwards
     ctx = jax.set_mesh(mesh)
@@ -104,9 +102,9 @@ def _lower_inner(cfg, shape, mesh, arch_id, shape_name, multi_pod, strategy,
             specs["pos"],
             _sds_with(tok_b, bshard_fn(tok_b))["tokens"])
 
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = time.perf_counter() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
     mem = compiled.memory_analysis()
@@ -170,7 +168,7 @@ def main():
         assert args.arch and args.shape, "--arch and --shape (or --all)"
         if not supports(args.arch, args.shape):
             print(f"SKIP {args.arch} x {args.shape}: unsupported "
-                  f"(see DESIGN.md §4)")
+                  "(see DESIGN.md §4)")
             return
         todo = [(args.arch, args.shape)]
 

@@ -23,21 +23,21 @@ def serve(cfg, *, n_requests: int, prompt_len: int, gen: int, seed: int = 0):
     batch = reduced_batch(cfg, n_requests, prompt_len, seed=seed)
     max_seq = prompt_len + gen
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache = registry.prefill(params, cfg, batch, max_seq=max_seq)
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
 
     decode = jax.jit(
         lambda p, c, pos, tok: registry.decode_step(p, cfg, c, pos, tok))
     tok = jnp.argmax(logits[:, -1:, :cfg.vocab_size], axis=-1)
     out = [tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for t in range(gen - 1):
         logits, cache = decode(params, cache, jnp.int32(prompt_len + t), tok)
         tok = jnp.argmax(logits[:, :, :cfg.vocab_size], axis=-1)
         out.append(tok)
     jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
     tokens = jnp.concatenate(out, axis=1)
     return tokens, t_prefill, t_decode
 

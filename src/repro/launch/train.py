@@ -44,7 +44,7 @@ def train(cfg, *, steps: int, batch: int, seq: int, strategy: str,
     loader = loader or ShardedLoader(TokenDataset(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=seq)))
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(steps):
         batch_np = loader.next_batch(batch)
         b = {"tokens": jnp.asarray(batch_np["tokens"]),
@@ -58,7 +58,7 @@ def train(cfg, *, steps: int, batch: int, seq: int, strategy: str,
         params, opt_state, loss = step_fn(params, opt_state, b)
         losses.append(float(loss))
         if i % log_every == 0 or i == steps - 1:
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             tput = (i + 1) * batch * seq / dt
             print(f"step {i:5d}  loss {float(loss):.4f}  "
                   f"{tput:,.0f} tok/s", flush=True)

@@ -6,7 +6,7 @@ vlm / audio enc-dec); family-specific fields default to "off".
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax.numpy as jnp
 

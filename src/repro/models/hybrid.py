@@ -100,8 +100,6 @@ def forward_full(params, cfg: ModelConfig, tokens, *, mamba_cache=None,
         gm_cache = jax.tree.map(
             lambda x: x[:ng * per].reshape((ng, per) + x.shape[1:]), mcache)
 
-    attn_caches = []
-
     def inner(h, xs):
         bp, c = xs
         h, nc = M.apply_mamba_block(bp, cfg, h, cache=c)

@@ -8,7 +8,7 @@ Pallas flash-attention kernel in ``repro.kernels.flash_attention``.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

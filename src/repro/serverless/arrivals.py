@@ -21,6 +21,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.core.rng import base_stream
 from repro.data.pipeline import OnlineStream
 from repro.serverless.platform import LAMBDA_GB_SECOND, LAMBDA_PER_REQUEST
 
@@ -89,7 +90,7 @@ class RequestStream:
         s = self.spec
         diurnal = OnlineStream(s.base_rps, seed=self.seed,
                                period_s=s.period_s, amplitude=s.amplitude)
-        rng = np.random.RandomState(self.seed + 1)
+        rng = base_stream(self.seed + 1)
         bursts = self._burst_windows(t0, horizon_s, rng)
         chunks = []
         lo = t0

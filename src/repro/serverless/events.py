@@ -1292,7 +1292,7 @@ class EventEngine:
         if not 0.0 <= failure_rate < 1.0:
             # at 1.0 every iteration attempt fails and the simulated epoch
             # (like the real one) would never complete
-            raise ValueError(f"failure_rate must be in [0, 1), "
+            raise ValueError("failure_rate must be in [0, 1), "
                              f"got {failure_rate}")
         self.failure_rate = failure_rate
         self.shocks = shocks

@@ -14,10 +14,8 @@ Constants are calibrated to public AWS pricing (us-east-1, 2022):
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
 
 LAMBDA_GB_SECOND = 1.6667e-5
 LAMBDA_PER_REQUEST = 2e-7

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.rng import base_stream
 from repro.core.comm import (CommLike, CommPlan, CommSpec, build_plan,
                              overlap_iteration_time, plan_times)
 from repro.serverless.platform import FleetSpec, fn_gflops, fn_net_gbps
@@ -257,7 +258,7 @@ class LocalWorkerPool:
                                    1.0, n_workers)
         self.mode, self.staleness = parse_sync_mode(sync_mode, staleness)
         self.async_refresh_p = async_refresh_p
-        self._rng = np.random.RandomState(seed)
+        self._rng = base_stream(seed)
         self._iter = 0
         self._snaps: List = [None] * n_workers    # stale param snapshots
         self._vers = [0] * n_workers

@@ -15,11 +15,11 @@ our serverless cost substrate:
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.rng import base_stream
 from repro.serverless.platform import LAMBDA_GB_SECOND, LAMBDA_PER_REQUEST, fn_gflops
 
 
@@ -76,7 +76,7 @@ def simulate(policy: ServePolicy, *, arrival_rate: float,
     attaches per-batch :class:`BatchRecord` rows to the returned stats.
     """
     if arrivals is None:
-        rng = np.random.RandomState(seed)
+        rng = base_stream(seed)
         n = max(int(arrival_rate * horizon_s), 1)
         arrivals = np.sort(rng.uniform(0.0, horizon_s, size=n))
     latencies: List[float] = []

@@ -8,7 +8,7 @@ is batching-invariant (a request's tokens don't depend on its batchmates).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import List
 
 import jax
 import jax.numpy as jnp

@@ -69,10 +69,10 @@ class TaskSpec:
             raise ValueError(f"unknown task kind: {self.kind!r}")
         if self.kind == "deploy" and self.serving is None:
             raise ValueError(f"{self.name}: a deploy task needs a "
-                             f"ServingTask in `serving`")
+                             "ServingTask in `serving`")
         if self.kind != "deploy" and self.serving is not None:
             raise ValueError(f"{self.name}: `serving` is only valid on "
-                             f"deploy tasks")
+                             "deploy tasks")
         if self.epochs < 1:
             raise ValueError(f"{self.name}: epochs must be >= 1")
         if self.batch_size < 1:
@@ -83,7 +83,7 @@ class TaskSpec:
     def plans(self) -> List[EpochPlan]:
         if self.kind == "deploy":
             raise ValueError(f"{self.name}: deploy tasks run as a "
-                             f"ServingJob, not as epoch plans")
+                             "ServingJob, not as epoch plans")
         return [EpochPlan(self.batch_size, self.workload,
                           samples=self.samples) for _ in range(self.epochs)]
 
@@ -123,7 +123,7 @@ class WorkflowDAG:
                     queue.append(s)
         if len(order) != len(self.tasks):
             stuck = sorted(n for n in self.tasks if indeg[n] > 0)
-            raise ValueError(f"workflow has a dependency cycle through "
+            raise ValueError("workflow has a dependency cycle through "
                              f"{stuck}")
         return order
 

@@ -114,7 +114,7 @@ class WorkflowOrchestrator:
             if spec.sweep is not None and spec.sweep not in self.tuners:
                 raise ValueError(f"{spec.name} belongs to sweep "
                                  f"{spec.sweep!r} but no such HPOSweep was "
-                                 f"passed to the orchestrator")
+                                 "passed to the orchestrator")
 
         self.domain = ContentionDomain()
         self._running: Dict[str, _TaskRun] = {}
@@ -141,7 +141,7 @@ class WorkflowOrchestrator:
                     if n not in self._finished and n not in self._dropped]
         if leftover:
             raise RuntimeError(f"workflow stalled: {leftover} neither "
-                               f"finished nor dropped")
+                               "finished nor dropped")
         winners = {}
         for name, tuner in self.tuners.items():
             if tuner.scores:

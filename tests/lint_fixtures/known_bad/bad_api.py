@@ -1,0 +1,21 @@
+"""known-bad: unseeded RNG construction and frozen-dataclass mutation."""
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    workers: int = 4
+    rate_usd: float = 0.1
+
+
+def run_trial(cfg: EngineConfig, seed: int):
+    rng = np.random.RandomState()            # api-unseeded-rng
+    cfg.workers = 8                          # api-frozen-mutation
+    object.__setattr__(cfg, "rate_usd", 0.2)  # api-frozen-mutation
+    return rng.rand(cfg.workers)
+
+
+def background_noise():
+    return np.random.default_rng()           # api-unseeded-rng

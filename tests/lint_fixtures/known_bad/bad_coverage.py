@@ -1,0 +1,34 @@
+"""known-bad: trace-kind drift and an unbound event handler.
+
+Mentions ``CalendarQueue`` so the handler-binding rule engages, the way
+it does for the real engine modules.
+"""
+import dataclasses
+from typing import ClassVar, FrozenSet
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    t: float
+    epoch: int
+    kind: str
+
+    KINDS: ClassVar[FrozenSet[str]] = frozenset({"epoch", "dead_kind"})
+
+
+class MiniEngine:
+    """Pushes events at a CalendarQueue-backed domain."""
+
+    def __init__(self, domain):
+        self.domain = domain
+        self.events = []
+
+    def _compute_done(self, arg):
+        self.events.append(TraceEvent(0.0, 0, "epoch"))
+
+    def emit_typo(self):
+        self.events.append(TraceEvent(0.0, 0, "epohc"))
+
+    def arm(self, t):
+        self.domain.at2(t, self._compute_done, None)
+        self.domain.at2(t, self._compute_dnoe, None)

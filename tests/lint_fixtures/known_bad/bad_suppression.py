@@ -1,0 +1,10 @@
+"""known-bad: suppressions that are themselves violations."""
+import time
+
+
+def stamp_a():
+    return time.time()  # simlint: ok(det-wallclock)
+
+
+def stamp_b():
+    return time.time()  # simlint: ok(no-such-rule, the rule id is a typo)

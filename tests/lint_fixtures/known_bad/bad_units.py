@@ -1,0 +1,15 @@
+"""known-bad: billing-unit mixing the suffix inference must catch."""
+
+
+def bill(wall_s, rate_usd, state_mb, quota_gb, bw_gbps):
+    total_usd = wall_s + rate_usd           # unit-mix (line 5)
+    if state_mb > quota_gb:                 # unit-mix (line 6)
+        total_usd += state_mb               # unit-mix (line 7, AugAssign)
+    budget_s = rate_usd                     # unit-assign (line 8)
+    charge(keepalive_s=rate_usd)            # unit-assign (line 9)
+    ok_usd = wall_s * rate_usd              # conversion: not flagged
+    return total_usd, budget_s, ok_usd
+
+
+def charge(keepalive_s=0.0):
+    return keepalive_s

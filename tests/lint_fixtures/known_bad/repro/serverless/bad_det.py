@@ -1,0 +1,41 @@
+"""known-bad: every determinism rule fires in this file.
+
+The path mirrors ``repro/serverless/`` so the scoped set-iteration rule
+applies, exactly as it would inside the real engine package.
+"""
+import random
+import time
+from datetime import datetime
+
+import numpy as np
+
+
+def draw_noise(n):
+    return np.random.rand(n)            # det-global-rng (line 14)
+
+
+def pick_worker(workers):
+    return random.choice(workers)       # det-global-rng (line 18)
+
+
+def stamp():
+    return time.time()                  # det-wallclock (line 22)
+
+
+def stamp_iso():
+    return datetime.now().isoformat()   # det-wallclock (line 26)
+
+
+def make_rng(seed):
+    return np.random.RandomState(seed)  # det-raw-randomstate (line 30)
+
+
+def drain(pending):
+    done = set()
+    for wid in pending | done:          # det-set-iter (line 35)
+        done.add(wid)
+    return [w for w in done]            # det-set-iter (line 37)
+
+
+def kinds(registry):
+    return list(registry.keys())        # det-set-iter (line 41)

@@ -1,0 +1,45 @@
+"""known-clean: the blessed idioms for everything known_bad does wrong.
+
+Same scoped path (``repro/serverless/``) so the set-iteration rule is
+active here too — ``sorted(...)`` is what keeps it quiet.
+"""
+import time
+
+from repro.core.rng import base_stream, stream
+
+
+def draw_noise(seed, n):
+    return stream(seed, "noise").standard_normal(n)
+
+
+def make_rng(seed):
+    return base_stream(seed)
+
+
+def drain(pending):
+    done = set()
+    for wid in sorted(pending | done):
+        done.add(wid)
+    return sorted(done)
+
+
+def kinds(registry):
+    return sorted(registry.keys())
+
+
+def timed_region(fn):
+    t0 = time.perf_counter()            # duration timer: allowed
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def bench_header():
+    # operator-facing log stamp, never enters a trace or a hash
+    # simlint: ok(det-wallclock, run header stamp only, not simulation state)
+    return time.time()
+
+
+def bill(wall_s, rate_usd, state_mb):
+    state_gb = state_mb / 1024.0
+    cost_usd = wall_s * rate_usd
+    return cost_usd, state_gb

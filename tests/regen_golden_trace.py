@@ -1,14 +1,18 @@
-"""Regenerate tests/golden_engine_trace.txt after an *intentional* engine
-semantics change.
+"""Regenerate (or verify) tests/golden_engine_trace.txt.
 
-    PYTHONPATH=src python tests/regen_golden_trace.py
+    PYTHONPATH=src python tests/regen_golden_trace.py            # rewrite
+    PYTHONPATH=src python tests/regen_golden_trace.py --check    # CI gate
 
 Builds the exact engine `test_golden_trace_reproduced_verbatim` pins
 (seed 42, 2 workers, 2 iterations, straggler sigma 0.3), runs it twice to
-prove the trace is byte-stable, and rewrites the golden file. Review the
-diff before committing: every changed line is a semantic change to the
-event order or timestamps that the test suite will now enforce.
+prove the trace is byte-stable, then either rewrites the golden file or
+— with ``--check`` — compares against the checked-in file and exits 1 on
+any drift without writing. Review the diff before committing a rewrite:
+every changed line is a semantic change to the event order or timestamps
+that the test suite will now enforce.
 """
+import argparse
+import difflib
 import pathlib
 import sys
 
@@ -17,19 +21,41 @@ sys.path.insert(0, str(pathlib.Path(__file__).parent))
 from test_engine_invariants import GOLDEN, _golden_engine  # noqa: E402
 
 
-def main() -> None:
+def main() -> int:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--check", action="store_true",
+                        help="verify the checked-in golden trace is "
+                             "regenerable byte-identical; write nothing")
+    args = parser.parse_args()
+
     a = _golden_engine().run()
     b = _golden_engine().run()
     text_a = "\n".join(a.trace) + "\n"
     text_b = "\n".join(b.trace) + "\n"
     if text_a != text_b:
         raise SystemExit("trace is not byte-stable across runs; refusing "
-                         "to regenerate")
+                         "to continue")
     old = GOLDEN.read_text() if GOLDEN.exists() else ""
+
+    if args.check:
+        if text_a != old:
+            diff = difflib.unified_diff(
+                old.splitlines(keepends=True),
+                text_a.splitlines(keepends=True),
+                fromfile="checked-in", tofile="regenerated")
+            sys.stderr.writelines(diff)
+            print(f"FAIL: {GOLDEN} is not regenerable byte-identical "
+                  "(see diff above)", file=sys.stderr)
+            return 1
+        print(f"OK: {GOLDEN} regenerates byte-identical "
+              f"({len(a.trace)} events)")
+        return 0
+
     GOLDEN.write_text(text_a)
     changed = "changed" if text_a != old else "unchanged"
     print(f"wrote {GOLDEN} ({len(a.trace)} events, {changed})")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

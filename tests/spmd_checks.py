@@ -56,7 +56,7 @@ def check_sync_equivalence():
 def check_sync_property():
     """Random pytrees with awkward shapes (incl. not divisible by n) stay
     exactly mean-reduced under the hierarchical strategy."""
-    from repro.core.hier_sync import scatter_reduce_mean, sync_grads
+    from repro.core.hier_sync import sync_grads
     mesh = Mesh(np.array(jax.devices()), ("data",))
     rng = np.random.RandomState(1)
     for trial in range(5):

@@ -3,15 +3,13 @@ constraint-aware search (paper Section 3.2)."""
 import math
 
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
 except ImportError:                      # optional dep: fixed example cases
     from hypothesis_fallback import given, settings, st
 
-from repro.core import (GP, BayesianOptimizer, Config, ConfigSpace,
-                        expected_improvement)
+from repro.core import GP, BayesianOptimizer, ConfigSpace, expected_improvement
 
 
 def test_gp_interpolates_training_points():

@@ -2,7 +2,6 @@
 transforms, closed-form pricing (overlap included), the water-filling
 SharedLink, and load-aware shard placement — the one communication
 schedule all three execution layers consume."""
-import math
 
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Cost model + communication model properties (paper Sections 3.3, 4.3)."""
 import dataclasses
 
-import numpy as np
 import pytest
 try:
     from hypothesis import given, settings

@@ -2,7 +2,6 @@
 with the analytic model, straggler/sync-mode dynamics, duration-cap and
 billing semantics, and the LocalWorkerPool's matching stale-gradient
 numerics."""
-import math
 
 import numpy as np
 import pytest

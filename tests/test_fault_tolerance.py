@@ -1,6 +1,5 @@
 """Fault-tolerance properties of the task scheduler (paper Section 4.1)."""
 import numpy as np
-import pytest
 
 from repro.core import Config, ConfigSpace, EpochPlan, Goal, TaskScheduler
 from repro.serverless import (WORKLOADS, ObjectStore, ParamStore,
@@ -54,7 +53,7 @@ def test_checkpoint_restart_resumes_training_exactly():
     import jax
     import jax.numpy as jnp
     from repro.checkpoint import CheckpointMeta, DiskCheckpointer
-    from repro.configs import ARCHS, reduced, reduced_batch
+    from repro.configs import ARCHS, reduced
     from repro.data import DataConfig, IteratorState, ShardedLoader, TokenDataset
     from repro.models import registry
     from repro.optim import AdamW

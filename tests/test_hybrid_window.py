@@ -3,9 +3,8 @@ boundary must match the windowed full-attention reference — this is the
 mechanism that makes long_500k sub-quadratic for the hybrid."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import ARCHS, reduced, reduced_batch
+from repro.configs import ARCHS, reduced
 from repro.models import registry
 
 WINDOW = 16

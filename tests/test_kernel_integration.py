@@ -1,7 +1,6 @@
 """Kernel-in-model integration: enabling the Pallas paths
 (use_flash_kernel / use_ssd_kernel) must not change model outputs."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,0 +1,110 @@
+"""Fixture tests for the simlint passes.
+
+``tests/lint_fixtures/known_bad/`` holds one file per pass with every
+rule violated on a commented line; ``known_clean/`` holds the blessed
+idioms for the same operations. The two trees are linted separately —
+the trace-kind cross-check is project-wide, and the bad tree declares
+its own ``TraceEvent`` that must not be merged with the clean one.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, Linter
+
+FIXTURES = Path(__file__).parent / "lint_fixtures"
+BAD = FIXTURES / "known_bad"
+CLEAN = FIXTURES / "known_clean"
+
+
+def _findings(root):
+    return Linter().lint_paths([str(root)])
+
+
+@pytest.fixture(scope="module")
+def bad():
+    return _findings(BAD)
+
+
+def _at(findings, filename, rule):
+    """Lines in ``filename`` where ``rule`` fired."""
+    return sorted(f.line for f in findings
+                  if f.path.endswith(filename) and f.rule == rule)
+
+
+def test_clean_tree_is_clean():
+    assert _findings(CLEAN) == []
+
+
+def test_every_rule_has_a_fixture(bad):
+    fired = {f.rule for f in bad}
+    missing = set(RULES) - fired - {"parse-error"}
+    assert not missing, f"rules with no known-bad fixture: {sorted(missing)}"
+
+
+def test_determinism_rules(bad):
+    f = "known_bad/repro/serverless/bad_det.py"
+    assert _at(bad, f, "det-global-rng") == [14, 18]
+    assert _at(bad, f, "det-wallclock") == [22, 26]
+    assert _at(bad, f, "det-raw-randomstate") == [30]
+    assert _at(bad, f, "det-set-iter") == [35, 37, 41]
+
+
+def test_unit_rules(bad):
+    f = "known_bad/bad_units.py"
+    assert _at(bad, f, "unit-mix") == [5, 6, 7]
+    assert _at(bad, f, "unit-assign") == [8, 9]
+    # multiplication is a conversion: line 10 must NOT be flagged
+    assert all(x.line != 10 for x in bad if x.path.endswith(f))
+
+
+def test_coverage_rules(bad):
+    f = "known_bad/bad_coverage.py"
+    assert _at(bad, f, "trace-kind-dead") == [16]
+    assert _at(bad, f, "trace-kind-undeclared") == [30]
+    assert _at(bad, f, "event-unbound-handler") == [34]
+    # the correctly-bound push on line 33 is not flagged
+    assert all(x.line != 33 for x in bad if x.path.endswith(f))
+
+
+def test_api_rules(bad):
+    f = "known_bad/bad_api.py"
+    assert _at(bad, f, "api-unseeded-rng") == [14, 21]
+    assert _at(bad, f, "api-frozen-mutation") == [15, 16]
+
+
+def test_suppressions_require_a_reason(bad):
+    f = "known_bad/bad_suppression.py"
+    # a reasonless ok(...) is reported AND does not suppress
+    assert _at(bad, f, "suppression-needs-reason") == [6]
+    assert 6 in _at(bad, f, "det-wallclock")
+    # an unknown rule id is reported AND does not suppress
+    assert _at(bad, f, "suppression-unknown-rule") == [10]
+    assert 10 in _at(bad, f, "det-wallclock")
+
+
+def test_suppression_with_reason_suppresses():
+    # clean.py carries exactly one suppression (a comment-only line
+    # covering the wall-clock read below it) and lints clean
+    src = (CLEAN / "repro/serverless/clean.py").read_text()
+    assert "simlint: ok(det-wallclock," in src
+    assert "time.time()" in src
+    assert _findings(CLEAN / "repro/serverless/clean.py") == []
+
+
+def test_docstring_mention_is_not_a_suppression(tmp_path):
+    # `# simlint: ok(...)` inside a string literal is documentation;
+    # only real comment tokens suppress (or get policy-checked)
+    p = tmp_path / "doc.py"
+    p.write_text('"""example: # simlint: ok(det-wallclock)"""\nx = 1\n')
+    assert Linter().lint_paths([str(p)]) == []
+
+
+def test_severity_threshold_exit_codes():
+    from repro.analysis.lint import main
+    bad_paths = [str(BAD)]
+    assert main(bad_paths + ["--fail-on", "never"]) == 0
+    assert main(bad_paths + ["--fail-on", "error"]) == 1
+    assert main(bad_paths + ["--fail-on", "warning"]) == 1
+    clean_paths = [str(CLEAN)]
+    assert main(clean_paths + ["--fail-on", "warning"]) == 0

@@ -1,0 +1,88 @@
+"""Regression pins for the real violations simlint surfaced (PR 9).
+
+The linter's first run over the tree found, among others:
+
+- ``TokenDataset``/``OnlineStream``/``LocalWorkerPool``/the serving
+  batcher constructing ``np.random.RandomState`` directly instead of
+  going through ``repro.core.rng`` (det-raw-randomstate) — fixed by
+  routing through ``base_stream``, which is bit-identical by contract.
+- ``TraceEvent.KINDS`` declaring a ``"profile"`` kind that nothing has
+  emitted since the profiling events moved onto the cost ledger
+  (trace-kind-dead) — the runtime ``__post_init__`` check can only see
+  the *other* direction, so the dead kind sat there keeping
+  ``e.kind == "profile"`` filters looking alive.
+- wall-clock ``time.time()`` duration timing in the launch scripts and
+  the e2e example (det-wallclock) — moved to ``time.perf_counter``.
+
+These tests pin each fix so it cannot quietly regress, and assert the
+lint baseline of zero findings over the shipped tree.
+"""
+import ast
+from pathlib import Path
+
+import numpy as np
+
+from repro.analysis import Linter
+from repro.core.rng import base_stream
+from repro.core.scheduler import TraceEvent
+from repro.data.pipeline import DataConfig, TokenDataset
+
+REPO = Path(__file__).parent.parent
+
+
+def test_token_dataset_draws_are_stream_routed_and_stable():
+    """The nastiest pre-existing violation: TokenDataset seeded a raw
+    RandomState from an ad-hoc formula. base_stream must reproduce the
+    exact bit pattern (same-seed batches are golden-trace inputs)."""
+    cfg = DataConfig(vocab_size=64, seq_len=8, seed=7)
+    a = TokenDataset(cfg).sample(epoch=3, index=11, n=4, seq=8)
+    b = TokenDataset(cfg).sample(epoch=3, index=11, n=4, seq=8)
+    np.testing.assert_array_equal(a, b)
+    # and base_stream is RandomState bit-for-bit at the formula's seed,
+    # so every pre-fix golden artifact derived from this data stays valid
+    seed = (7 * 1_000_003 + 3 * 7919 + 11) % (2 ** 31)
+    np.testing.assert_array_equal(
+        base_stream(seed).randint(0, 64, size=(4, 8)),
+        np.random.RandomState(seed).randint(0, 64, size=(4, 8)))
+
+
+def test_trace_kinds_match_emissions():
+    """Both directions of KINDS sync, statically: every literal kind
+    constructed anywhere in src/ is declared, and every declared kind
+    is constructed somewhere (no dead kinds — the 'profile' bug)."""
+    emitted = set()
+    for path in (REPO / "src").rglob("*.py"):
+        tree = ast.parse(path.read_text())
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                fn = node.func
+                name = fn.attr if isinstance(fn, ast.Attribute) else \
+                    getattr(fn, "id", None)
+                if name != "TraceEvent":
+                    continue
+                if len(node.args) > 2 and isinstance(
+                        node.args[2], ast.Constant):
+                    emitted.add(node.args[2].value)
+                for kw in node.keywords:
+                    if kw.arg == "kind" and isinstance(
+                            kw.value, ast.Constant):
+                        emitted.add(kw.value.value)
+    assert emitted == set(TraceEvent.KINDS), (
+        "TraceEvent.KINDS drifted from the actual emission sites: "
+        f"declared={sorted(TraceEvent.KINDS)} emitted={sorted(emitted)}")
+
+
+def test_no_wallclock_in_launch_or_examples():
+    for rel in ("src/repro/launch", "examples"):
+        for path in (REPO / rel).rglob("*.py"):
+            assert "time.time()" not in path.read_text(), (
+                f"{path}: wall-clock read reintroduced; use "
+                "time.perf_counter for durations")
+
+
+def test_shipped_tree_lints_clean():
+    """The zero-findings baseline CI enforces, asserted from pytest too
+    so a local run catches drift before CI does."""
+    roots = [str(REPO / d) for d in ("src", "benchmarks", "examples")]
+    findings = Linter().lint_paths(roots)
+    assert findings == [], "\n".join(f.render() for f in findings)

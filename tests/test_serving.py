@@ -1,5 +1,4 @@
 """Serving layer: adaptive batching policy + real-model batched engine."""
-import jax
 import numpy as np
 import pytest
 

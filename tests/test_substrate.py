@@ -1,5 +1,4 @@
 """Substrate tests: checkpointing, data pipeline, sharding rules, optimizer."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +9,7 @@ from jax.sharding import PartitionSpec as P
 from repro.checkpoint import CheckpointMeta, DiskCheckpointer, StoreCheckpointer
 from repro.configs import ARCHS
 from repro.data import DataConfig, IteratorState, OnlineStream, ShardedLoader, TokenDataset
-from repro.distributed.sharding import cache_specs, param_specs
+from repro.distributed.sharding import param_specs
 from repro.models import registry
 from repro.optim import AdamW
 from repro.serverless import ObjectStore

@@ -1,11 +1,10 @@
 """End-to-end behaviour tests for the SMLT system."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import ARCHS, reduced, reduced_batch
-from repro.core import Config, ConfigSpace, EpochPlan, Goal, TaskScheduler
+from repro.core import ConfigSpace, EpochPlan, Goal, TaskScheduler
 from repro.models import registry
 from repro.optim import apply_sgd
 from repro.serverless import (WORKLOADS, LocalWorkerPool, ObjectStore,
