@@ -20,8 +20,8 @@ import sys
 import time
 
 from benchmarks.common import emit_json
-from benchmarks import (async_staleness, comm_breakdown, comm_scaling,
-                        comm_strategies, config_sensitivity,
+from benchmarks import (async_staleness, backend_arbitrage, comm_breakdown,
+                        comm_scaling, comm_strategies, config_sensitivity,
                         dynamic_batching, hetero_fleet, kernels_bench,
                         multi_job, nas_adaptation, online_learning,
                         optimizer_compare, overlap_pipeline, roofline,
@@ -47,6 +47,7 @@ BENCHES = {
     "event_hetero_fleet": hetero_fleet,
     "event_multi_job": multi_job,
     "workflow_hpo": workflow_hpo,
+    "backend_arbitrage": backend_arbitrage,
     "kernels": kernels_bench,
     "roofline": roofline,
 }
@@ -54,11 +55,14 @@ BENCHES = {
 # the CI smoke set: the event-path benchmarks (cheap, no BO search inside)
 # plus one analytic module, all at reduced scale where supported;
 # workflow_hpo runs the orchestrator end to end (successive halving vs
-# uniform HPO under one deadline+budget) with reduced rung samples
+# uniform HPO under one deadline+budget) with reduced rung samples, and
+# backend_arbitrage asserts the serverless/gpu_vm flip, the in-budget
+# HPO-on-serverless + finetune-on-gpu_vm split, and the hazard-aware
+# checkpoint-cadence win over every constant cadence
 QUICK = ["fig7_comm_breakdown", "comm_strategies", "overlap_pipeline",
          "event_straggler_tail", "event_async_staleness",
          "event_hetero_fleet", "event_multi_job", "serving_contention",
-         "workflow_hpo"]
+         "workflow_hpo", "backend_arbitrage"]
 
 
 def _run_mod(mod, quick: bool):

@@ -29,7 +29,8 @@ from repro.analysis.core import FileContext, Finding, register_rule
 
 register_rule("unit-mix", "error",
               "arithmetic or comparison mixing incompatible unit "
-              "dimensions (suffix-inferred: _s, _gbps, _mb, _gb, _usd, _ev)")
+              "dimensions (suffix-inferred: _s, _gbps, _mb, _gb, _usd, "
+              "_usd_per_s, _usd_per_hr, _ev)")
 register_rule("unit-assign", "warning",
               "assignment (or keyword argument) carries a value of one "
               "unit dimension into a name of another without conversion")
@@ -37,8 +38,14 @@ register_rule("unit-assign", "warning",
 # endswith-matched, longest suffix first so `_gbps` is not read as `_s`
 # and `_mbps`-style names never alias `_s`. `_mb` and `_gb` are distinct
 # dimensions on purpose: adding megabytes to gigabytes without a /1024
-# is exactly the class of bug this pass exists for.
+# is exactly the class of bug this pass exists for. The billing *rates*
+# (`_usd_per_s`, `_usd_per_hr`) come first for the same reason: a
+# per-second rate is neither seconds nor dollars, and adding an hourly
+# rate to a per-second one without the /3600 is the exact spot-market
+# slip the multi-backend billing paths are exposed to.
 _SUFFIXES = (
+    ("_usd_per_hr", "dollars per hour"),
+    ("_usd_per_s", "dollars per second"),
     ("_gbps", "bandwidth (Gbit/s)"),
     ("_usd", "dollars"),
     ("_mb", "megabytes"),

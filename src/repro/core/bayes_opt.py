@@ -86,7 +86,12 @@ class Config:
     (``repro.core.comm.CommSpec``): the aggregation strategy ("" keeps
     the scheduler's default scheme), the top-k wire ratio (1.0 = dense),
     the hier tree fan-in (0 = n/a), and the compute∥comm overlap depth
-    (micro-batch segments; 1 = sequential)."""
+    (micro-batch segments; 1 = sequential).
+
+    ``backend`` is the searchable execution target
+    (``repro.serverless.backends.BACKENDS``): "" (or "serverless") keeps
+    the native serverless path; "vm"/"gpu_vm" swap in provisioning
+    delays, flat compute/NIC rates, and per-second billing."""
     workers: int
     memory_mb: int
     small_frac: float = 0.0
@@ -94,8 +99,10 @@ class Config:
     compress_ratio: float = 1.0
     branching: int = 0
     pipeline_depth: int = 1
+    backend: str = ""                  # "" | "serverless" | "vm" | "gpu_vm"
 
     _COMM_IDX = ("", "ps", "scatter_reduce", "hier")
+    _BACKEND_IDX = ("serverless", "vm", "gpu_vm")
 
     def as_unit(self, space: "ConfigSpace") -> np.ndarray:
         return np.array([
@@ -113,6 +120,10 @@ class Config:
             # overlap depth on a log scale: 1 -> 0, 8 -> 1
             0.0 if self.pipeline_depth <= 1 else min(
                 math.log2(self.pipeline_depth) / 3.0, 1.0),
+            # backend as an ordinal ("" == serverless == 0)
+            0.0 if self.backend == "" else (
+                self._BACKEND_IDX.index(self.backend)
+                / (len(self._BACKEND_IDX) - 1)),
         ])
 
 
@@ -139,6 +150,11 @@ class ConfigSpace:
     ratio_choices: Tuple[float, ...] = (1.0, 0.1, 0.05, 0.01)
     branching_choices: Tuple[int, ...] = (2, 4, 8)
     depth_choices: Tuple[int, ...] = (1, 2, 4)
+    # execution target: when True, candidates also draw a backend, so the
+    # optimizer can arbitrage serverless elasticity against flat-rate
+    # VM/GPU compute (the scheduler migrates on a backend change)
+    search_backend: bool = False
+    backend_choices: Tuple[str, ...] = ("serverless", "vm", "gpu_vm")
 
     def sample(self, rng: np.random.RandomState, n: int) -> List[Config]:
         ws = rng.randint(self.min_workers, self.max_workers + 1, size=n)
@@ -160,10 +176,18 @@ class ConfigSpace:
                   rng.randint(len(self.depth_choices), size=n)]
         else:
             cm, ra, br, dp = [""] * n, [1.0] * n, [0] * n, [1] * n
+        # drawn *after* every earlier dimension so existing search
+        # configurations consume the rng stream identically (bit-identity)
+        if self.search_backend:
+            be = [self.backend_choices[i] for i in
+                  rng.randint(len(self.backend_choices), size=n)]
+        else:
+            be = [""] * n
         return [Config(int(w), int(self.min_memory + m * self.memory_step),
                        float(f), c, float(r), int(b) if c == "hier" else 0,
-                       int(d))
-                for w, m, f, c, r, b, d in zip(ws, ms, fr, cm, ra, br, dp)]
+                       int(d), e)
+                for w, m, f, c, r, b, d, e in zip(ws, ms, fr, cm, ra, br,
+                                                  dp, be)]
 
 
 @dataclasses.dataclass

@@ -32,6 +32,20 @@ def compression_inflation(ratio: float,
     return 1.0 + per_decade * math.log10(1.0 / max(ratio, 1e-6))
 
 
+def preemption_inflation(hazard_per_s: float,
+                         ckpt_write_s: float = 2.0) -> float:
+    """Multiplicative wall/cost inflation of running on a preemptible
+    (spot) backend, at the hazard-aware Young–Daly checkpoint cadence
+    ``tau* = sqrt(2 * ckpt_write_s / hazard)``: the checkpoint overhead
+    ``ckpt/tau*`` plus the expected rework ``hazard * tau* / 2`` sum to
+    ``sqrt(2 * hazard * ckpt_write_s)``. The Bayesian optimizer
+    multiplies a spot candidate's predicted time and dollars by this, so
+    the discount race against on-demand is judged net of preemptions."""
+    if hazard_per_s <= 0.0 or ckpt_write_s <= 0.0:
+        return 1.0
+    return 1.0 + math.sqrt(2.0 * hazard_per_s * ckpt_write_s)
+
+
 def staleness_inflation(sync_mode: str, staleness: int = 0,
                         n_workers: int = 1,
                         per_step: float = SSP_PENALTY_PER_STEP) -> float:

@@ -28,6 +28,7 @@ import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 from repro.core import cost_model as _cm
+from repro.serverless.backends import resolve_backend
 from repro.serverless.platform import FleetSpec
 from repro.serverless.stores import ObjectStore, ParamStore
 from repro.serverless.worker import Workload
@@ -50,11 +51,26 @@ def probe_key(w: Workload, scheme, config, global_batch: int,
               fleet: Optional[FleetSpec] = None, **kwargs) -> Tuple:
     """The full-input hash key one cost-model probe is memoized under.
     ``scheme`` (str/CommSpec/CommPlan), ``config`` (frozen Config), and
-    ``fleet.workers`` (frozen WorkerSpecs) are hashable as-is."""
+    ``fleet.workers`` (frozen WorkerSpecs) are hashable as-is.
+
+    Kwargs are normalized so equivalent calls share one entry and
+    distinct ones never collide: ``None``-valued kwargs (the defaults)
+    are dropped, and ``backend`` is canonicalized through
+    ``resolve_backend`` — ``None``/``""``/``"serverless"`` all key as
+    absent, while a name and its resolved ``BackendSpec`` (frozen, its
+    ``PriceTrace`` tuple-backed — spot price and bid included) key
+    identically, so cached estimates never leak across backends."""
+    if "backend" in kwargs:
+        spec = resolve_backend(kwargs["backend"])
+        if spec is None:
+            del kwargs["backend"]
+        else:
+            kwargs["backend"] = spec
     return (dataclasses.astuple(w), scheme, config, global_batch,
             _store_key(param_store), _store_key(object_store),
             None if fleet is None else fleet.workers,
-            tuple(sorted(kwargs.items())))
+            tuple(sorted((k, v) for k, v in kwargs.items()
+                         if v is not None)))
 
 
 class ProbeCache:

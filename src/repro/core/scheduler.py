@@ -27,11 +27,13 @@ from typing import Callable, ClassVar, Dict, FrozenSet, List, Optional, Tuple
 from repro.core.bayes_opt import BayesianOptimizer, Config, ConfigSpace
 from repro.core.comm import CommSpec, parse_scheme
 from repro.core.constraints import (Goal, compression_inflation,
+                                    preemption_inflation,
                                     staleness_inflation)
 from repro.core.cost_model import epoch_estimate, profile_cost
 from repro.core.monitor import ThroughputMonitor
 from repro.core.probe_cache import DEFAULT_CACHE, ProbeCache
 from repro.core.rng import base_stream
+from repro.serverless.backends import resolve_backend
 from repro.serverless.platform import ServerlessPlatform, fleet_from_config
 from repro.serverless.stores import ObjectStore, ParamStore
 from repro.serverless.worker import Workload
@@ -63,7 +65,7 @@ class TraceEvent:
     # before it can appear in a trace, so typos fail loudly instead of
     # silently slipping past `events if e.kind == ...` filters
     KINDS: ClassVar[FrozenSet[str]] = frozenset(
-        {"epoch", "reoptimize", "reoptimize_mid"})
+        {"epoch", "reoptimize", "reoptimize_mid", "migrate"})
 
     def __post_init__(self):
         if self.kind not in self.KINDS:
@@ -244,7 +246,7 @@ class TaskScheduler:
                                 space.max_memory),
                             warm_start.small_frac, warm_start.comm,
                             warm_start.compress_ratio, warm_start.branching,
-                            warm_start.pipeline_depth)]
+                            warm_start.pipeline_depth, warm_start.backend)]
         t_prof = usd_prof = 0.0
         while not bo.done():
             c = seeds.pop(0) if seeds else bo.suggest()
@@ -252,12 +254,20 @@ class TaskScheduler:
             pt, pu, _ = self._profile_cost(
                 w, comm, c, batch, self.param_store, self.object_store,
                 self.profile_iters, framework_init_s=self.framework_init_s,
-                cold_start_s=self.cold_start_s)
-            if pt > self.probe_cap_s:
+                cold_start_s=self.cold_start_s,
+                backend=self.engine_opts.get("backend"))
+            # the probe cap targets runaway *compute*, not the known fixed
+            # provisioning delay a VM-kind candidate always pays
+            cap = self.probe_cap_s
+            spec = resolve_backend(self.engine_opts.get("backend")
+                                   or c.backend)
+            if spec is not None:
+                cap += spec.provision_s
+            if pt > cap:
                 # censored probe: abort at the cap, record a pessimistic
                 # objective so the GP steers away without full payment
-                frac = self.probe_cap_s / pt
-                t_prof += self.probe_cap_s
+                frac = cap / pt
+                t_prof += cap
                 usd_prof += pu * frac
                 worst = max((o.objective for o in bo.obs), default=1.0)
                 bo.observe(c, worst * 10.0,
@@ -268,7 +278,8 @@ class TaskScheduler:
             est = self._epoch_estimate(
                 w, comm, c, batch, self.param_store, self.object_store,
                 framework_init_s=self.framework_init_s,
-                cold_start_s=self.cold_start_s, samples=samples)
+                cold_start_s=self.cold_start_s, samples=samples,
+                backend=self.engine_opts.get("backend"))
             total_t = est.wall_s * epochs_remaining
             total_c = est.cost_usd * epochs_remaining
             # convergence-aware objective: a relaxed sync mode buys
@@ -279,6 +290,14 @@ class TaskScheduler:
                 self.engine_opts.get("sync_mode", "bsp"),
                 self.engine_opts.get("staleness", 0), c.workers)
             infl *= compression_inflation(c.compress_ratio)
+            # a spot deployment (engine_opts backend spec, or the
+            # candidate's own) pays expected preemption overhead at the
+            # hazard-aware Young–Daly cadence
+            be = resolve_backend(self.engine_opts.get("backend")
+                                 or c.backend)
+            if be is not None and be.spot:
+                infl *= preemption_inflation(
+                    be.price_trace.hazard_per_s(be.bid_usd_per_hr))
             obj, cons, _ = goal.objective_and_constraint(total_t, total_c,
                                                          inflation=infl)
             bo.observe(c, obj, cons)
@@ -291,6 +310,27 @@ class TaskScheduler:
         # throughput) — those samples count toward the epoch
         useful = sum(1 for o in bo.obs) * self.profile_iters * batch
         return bo.best().config, t_prof, usd_prof, useful
+
+    # -- cross-backend migration ---------------------------------------------
+    def _migrate(self, old: Optional[Config], new: Config,
+                 w: Workload) -> float:
+        """Migration protocol at re-optimization: when the optimizer moves
+        the job to a different backend, the model + optimizer state
+        (params + Adam m,v) checkpoints out through the ObjectStore under
+        the old deployment and restores under the new one. Returns the
+        wall overhead of the two transfers; the new backend's
+        provisioning delay is paid by the next deployment's own init.
+        No-op when the backend is unchanged."""
+        if old is None or old.backend == new.backend:
+            return 0.0
+        ckpt_bytes = 12.0 * w.param_count
+        key = f"migrate/{self.job or 'job'}"
+        self.object_store.put(key, {"params": w.param_count},
+                              nbytes=ckpt_bytes)
+        dt = self.object_store.put_time(ckpt_bytes)
+        self.object_store.get(key, nbytes=ckpt_bytes)
+        dt += self.object_store.get_time(ckpt_bytes)
+        return dt
 
     # -- event-engine epoch execution ----------------------------------------
     def _run_epoch_event(self, plan: EpochPlan, goal: Goal, config: Config,
@@ -335,6 +375,10 @@ class TaskScheduler:
             if config.small_frac > 0.0 and "fleet" not in opts:
                 opts["fleet"] = fleet_from_config(
                     config.workers, config.memory_mb, config.small_frac)
+            # a searched backend deploys on its engine semantics (an
+            # explicit engine_opts backend — e.g. a spot variant — wins)
+            if config.backend and "backend" not in opts:
+                opts["backend"] = config.backend
             args = (plan.workload, self._comm_for(config), config.workers,
                     config.memory_mb, plan.batch_size, self.param_store,
                     self.object_store)
@@ -368,6 +412,7 @@ class TaskScheduler:
             iters_epoch += r.iters_done
             attempt += 1
             if r.stopped_early and remaining > 0 and adaptive:
+                prev = config
                 config, pt, pu, profiled = self.optimize(
                     plan.workload, plan.batch_size, goal,
                     epochs_remaining=n_plans - epoch_i, samples=remaining,
@@ -382,6 +427,15 @@ class TaskScheduler:
                     batch_size=plan.batch_size,
                     model_params=plan.workload.param_count,
                     cost_cum=cost_base + cost + usd_prof))
+                mig = self._migrate(prev, config, plan.workload)
+                if mig > 0.0:
+                    wall += mig
+                    events.append(TraceEvent(
+                        t_base + wall + t_prof, epoch_i, "migrate",
+                        workers=config.workers, memory_mb=config.memory_mb,
+                        batch_size=plan.batch_size,
+                        model_params=plan.workload.param_count,
+                        cost_cum=cost_base + cost + usd_prof))
             elif not r.stopped_early:
                 break
         meta = {"t_prof": t_prof, "usd_prof": usd_prof, "configs": configs}
@@ -454,6 +508,7 @@ class TaskScheduler:
                    plan.workload.flops_per_sample)
             profiled_samples = 0
             if config is None or (adaptive and sig != last_sig):
+                prev = config
                 config, pt, pu, profiled_samples = self.optimize(
                     plan.workload, plan.batch_size, goal,
                     epochs_remaining=len(plans) - i, samples=plan.samples,
@@ -468,6 +523,17 @@ class TaskScheduler:
                                          batch_size=plan.batch_size,
                                          model_params=plan.workload.param_count,
                                          cost_cum=cost))
+                mig = self._migrate(prev, config, plan.workload)
+                if mig > 0.0:
+                    # the job changes execution target: checkpoint out,
+                    # restore under the new backend, resume
+                    t += mig
+                    events.append(TraceEvent(
+                        t, i, "migrate", workers=config.workers,
+                        memory_mb=config.memory_mb,
+                        batch_size=plan.batch_size,
+                        model_params=plan.workload.param_count,
+                        cost_cum=cost))
             last_sig = sig
 
             samples_plan = plan.samples or plan.workload.dataset_samples
@@ -486,7 +552,8 @@ class TaskScheduler:
                     plan.workload, self._comm_for(config), config,
                     plan.batch_size, self.param_store, self.object_store,
                     framework_init_s=self.framework_init_s,
-                    cold_start_s=self.cold_start_s, samples=samples_left)
+                    cold_start_s=self.cold_start_s, samples=samples_left,
+                    backend=self.engine_opts.get("backend"))
             if (stop_at_budget and goal.budget_usd is not None
                     and cost + est_pre.cost_usd * st.cost_infl
                     > goal.budget_usd):
@@ -528,7 +595,8 @@ class TaskScheduler:
                     plan.workload, self._comm_for(config), config,
                     plan.batch_size, self.param_store, self.object_store,
                     framework_init_s=self.framework_init_s,
-                    cold_start_s=self.cold_start_s, samples=samples_left)
+                    cold_start_s=self.cold_start_s, samples=samples_left,
+                    backend=self.engine_opts.get("backend"))
                 # fault injection: failed iterations are redone (Section 4.1)
                 failures = int(rng.binomial(est.iters,
                                             self.platform.failure_rate))
@@ -544,12 +612,21 @@ class TaskScheduler:
                     # same basis epoch_estimate bills store_usd on
                     self.param_store.keep_alive(
                         est.iters * est.it_breakdown["store_busy"])
-                    # Lambda semantics: every worker is a request, and every
-                    # duration-cap restart re-invokes the whole fleet
-                    self.platform.ledger.charge_fleet(
-                        config.memory_mb, config.workers, wall,
-                        invocations_per_worker=est.restarts_per_worker + 1)
                     scale = wall / est.wall_s
+                    spec = resolve_backend(
+                        self.engine_opts.get("backend") or config.backend)
+                    if spec is None:
+                        # Lambda semantics: every worker is a request, and
+                        # every duration-cap restart re-invokes the fleet
+                        self.platform.ledger.charge_fleet(
+                            config.memory_mb, config.workers, wall,
+                            invocations_per_worker=est.restarts_per_worker
+                            + 1)
+                    else:
+                        # per-second VM billing: no GB-seconds, no requests
+                        self.platform.ledger.charge(
+                            f"backend:{spec.name}",
+                            est.backend_usd * scale)
                     self.platform.ledger.charge("store",
                                                 est.store_usd * scale)
                     self.platform.ledger.attribute(self.job, epoch_cost)

@@ -1,5 +1,8 @@
 from repro.serverless.arrivals import (  # noqa: F401
     ArrivalSpec, RequestStream, ServingTask)
+from repro.serverless.backends import (  # noqa: F401
+    BACKENDS, BackendSpec, PriceTrace, hazard_cadence_s, resolve_backend,
+    simulate_spot_epoch, spot_variant)
 from repro.serverless.events import (  # noqa: F401
     ContentionDomain, EngineResult, EventEngine, ServingJob, ServingResult)
 from repro.serverless.platform import (  # noqa: F401

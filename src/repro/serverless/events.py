@@ -107,6 +107,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import rng as rng_streams
+from repro.serverless.backends import BackendLike, resolve_backend
 from repro.serverless.platform import (CHECKPOINT_RESTORE_S,
                                        DATA_OBJECT_BYTES, LAMBDA_GB_SECOND,
                                        LAMBDA_MAX_DURATION_S,
@@ -785,10 +786,12 @@ class EngineResult:
     sim_events: int = 0          # logical per-worker state transitions
                                  # (cohort-weighted: comparable whether or
                                  # not workers were coalesced)
+    backend_usd: float = 0.0     # per-second VM/GPU compute dollars
+    preemptions: int = 0         # spot price-crossing kills, fleet-wide
 
     @property
     def cost_usd(self) -> float:
-        return self.lambda_usd + self.store_usd
+        return self.lambda_usd + self.store_usd + self.backend_usd
 
 
 class _FleetDraws:
@@ -875,7 +878,7 @@ class _WorkerState:
     __slots__ = ("wid", "members", "count", "it", "draws", "inv_recs",
                  "inv_count", "inv_gen", "inv_cont", "cap_gen", "cap_t",
                  "seg_gen", "seg_end", "activity", "pending", "restarting",
-                 "finished", "fan")
+                 "finished", "fan", "bill_t0")
 
     def __init__(self, members: range):
         self.wid = members.start
@@ -896,6 +899,7 @@ class _WorkerState:
         self.restarting = False
         self.finished = False
         self.fan = None               # lazily-built _FanoutWindow (σ>0 cohorts)
+        self.bill_t0 = math.inf       # per-second billing anchor (VM backends)
 
 
 class _PipelineRun:
@@ -1127,7 +1131,8 @@ class _FanoutWindow:
             wid0 = w.members.start
             trs[:] = [_Transfer(link, nbytes, lat, cbs[i], is_sync,
                                 cap_gbps=net_cap[wid0 + i]
-                                if is_sync else None)
+                                if is_sync else None,
+                                prio=eng.link_priority)
                       for i in range(m)]
             # seq order: all compute ends, then all setup elapses. Only
             # equal-timestamp ties could notice (continuous draws: none);
@@ -1161,7 +1166,8 @@ class _FanoutWindow:
         cap = (eng.net_cap[self.w.members.start + i]
                if ph.store == "param" else None)
         tr = _Transfer(link, ph.nbytes, link.latency_s * max(ph.requests, 1),
-                       self.cbs[i], is_sync, cap_gbps=cap)
+                       self.cbs[i], is_sync, cap_gbps=cap,
+                       prio=eng.link_priority)
         self.trs[i] = tr
         if is_sync:
             eng._sync_on()
@@ -1259,6 +1265,8 @@ class EventEngine:
                  memory_mb: float, global_batch: int,
                  param_store: ParamStore, object_store: ObjectStore, *,
                  fleet: Optional[FleetSpec] = None,
+                 backend: BackendLike = None,
+                 link_priority: float = 1.0,
                  shocks: Optional[ShockModel] = None,
                  domain: Optional[ContentionDomain] = None,
                  platform: Optional[ServerlessPlatform] = None,
@@ -1296,12 +1304,31 @@ class EventEngine:
                              f"got {failure_rate}")
         self.failure_rate = failure_rate
         self.shocks = shocks
-        self.init_s = cold_start_s + framework_init_s
+        # budget-weight -> network-weight coupling: every transfer this
+        # job opens claims the shared links at this priority (matches
+        # ServingJob.link_priority; allocator task priorities land here)
+        self.link_priority = link_priority
+        self.backend = resolve_backend(backend)
         self.restore_s = CHECKPOINT_RESTORE_S
         self.max_duration_s = max_duration_s
-        self.usable_s = max_duration_s - self.init_s - self.restore_s
-        if self.usable_s <= 0:
-            raise ValueError("max_duration_s leaves no usable window")
+        if self.backend is None:
+            self.init_s = cold_start_s + framework_init_s
+            self.usable_s = max_duration_s - self.init_s - self.restore_s
+            if self.usable_s <= 0:
+                raise ValueError("max_duration_s leaves no usable window")
+        else:
+            # VM-kind backend: provisioning replaces the cold start and
+            # the duration cap disappears (no cap timer is ever armed)
+            self.init_s = self.backend.provision_s + framework_init_s
+            self.usable_s = math.inf
+            if self.backend.spot and self.shocks is None:
+                # spot preemptions ride the shock machinery: one
+                # correlated kill-all shock per up-crossing of the bid
+                # (an explicit ``shocks=`` wins over the synthesis)
+                self.shocks = ShockModel(
+                    interval_s=math.inf, kill_frac=1.0,
+                    price_trace=self.backend.price_trace,
+                    bid_usd_per_hr=self.backend.bid_usd_per_hr)
         self.samples = samples or workload.dataset_samples
         self.iters = max(math.ceil(self.samples / global_batch), 1)
         self.seed = seed
@@ -1321,7 +1348,16 @@ class EventEngine:
         self.on_complete = on_complete
         self._t0 = 0.0
 
-        if fleet.is_homogeneous:
+        if self.backend is not None:
+            # flat per-worker compute rate and NIC: the fleet is
+            # effectively homogeneous regardless of memory tiers (the
+            # analytic iteration_time's exact VM regime)
+            local_batch = max(global_batch // self.n, 1)
+            self.base_compute_s = [
+                compute_time(workload, local_batch, m,
+                             gflops=self.backend.gflops_for(m))
+                for m in self.mem]
+        elif fleet.is_homogeneous:
             local_batch = max(global_batch // self.n, 1)
             self.base_compute_s = [compute_time(workload, local_batch, m)
                                    for m in self.mem]
@@ -1353,7 +1389,11 @@ class EventEngine:
         self._ov_phases = self.plan.phases[:self._ov_count]
         # per-worker function-network caps, carried as per-flow caps on the
         # (possibly cross-job shared) links; *8 as in the analytic model
-        self.net_cap = [fn_net_gbps(m) * 8 for m in self.mem]
+        if self.backend is not None:
+            self.net_cap = [self.backend.net_gbps_for(m) * 8
+                            for m in self.mem]
+        else:
+            self.net_cap = [fn_net_gbps(m) * 8 for m in self.mem]
         self.domain = domain or ContentionDomain()
         self._job_idx = self.domain._register(self)
         self.links: Dict[str, SharedLink] = {
@@ -1390,6 +1430,9 @@ class EventEngine:
         self._cap_restarts = 0
         self._failures = 0
         self._shock_events = 0
+        self._backend_usd = 0.0      # per-second VM/GPU compute dollars
+        self._preemptions = 0        # spot price-crossing kills
+        self._spot_fallback = False  # spot died once; now billing on-demand
         self._levents = 0            # logical (cohort-weighted) transitions
         # O(1) fleet aggregates (replacing per-event fleet scans):
         # worker count per completed-iteration value, the running minimum,
@@ -1418,7 +1461,8 @@ class EventEngine:
         straggler window, which ``_FanoutWindow`` simulates per member
         (see its docstring for the exactness argument)."""
         if not (self.mode == "bsp" and self.failure_rate == 0.0
-                and self.shocks is None and self.plan.pipeline_depth <= 1):
+                and self.shocks is None and self.plan.pipeline_depth <= 1
+                and (self.backend is None or not self.backend.spot)):
             return False
         if self.sigma == 0.0:
             # a heterogeneous fleet coalesces only in perf runs: traced
@@ -1525,7 +1569,8 @@ class EventEngine:
 
         cap = self.net_cap[w.wid] if store == "param" else None
         tr = _Transfer(link, nbytes, link.latency_s * max(requests, 1),
-                       finished, is_sync, cap_gbps=cap, weight=weight)
+                       finished, is_sync, cap_gbps=cap, weight=weight,
+                       prio=self.link_priority)
         if is_sync:
             self._sync_on()
         return tr
@@ -1597,12 +1642,39 @@ class EventEngine:
         cont, w.inv_cont = w.inv_cont, None
         w.cap_gen += 1
         w.cap_t = self.now + self.usable_s
-        self.domain.at2(w.cap_t, self._cap_fire, (w, w.cap_gen))
+        if w.cap_t != _INF:          # uncapped backends never arm the timer
+            self.domain.at2(w.cap_t, self._cap_fire, (w, w.cap_gen))
+        if self.backend is not None:
+            # per-second billing arms when provisioning+init completes;
+            # a worker killed during the provisioning gap bills nothing
+            w.bill_t0 = self.now
         self._levents += w.count
         cont()
 
     def _close_invocation(self, w: _WorkerState):
         now = self.now
+        if self.backend is not None:
+            # per-second billing from the arming anchor to now: spot runs
+            # integrate the price trace (engine-relative time) until the
+            # first preemption flips them to the on-demand rate; no
+            # GB-second or per-request fee, and no cap-splitting — so the
+            # records close directly instead of through platform.finish
+            if w.bill_t0 != _INF:
+                if self.backend.spot and not self._spot_fallback:
+                    usd = self.backend.price_trace.integral_usd(
+                        w.bill_t0 - self._t0, now - self._t0) * w.count
+                else:
+                    usd = (now - w.bill_t0) * self.backend.usd_per_s * w.count
+                self._backend_usd += usd
+                self.platform.ledger.charge(
+                    f"backend:{self.backend.name}", usd)
+                w.bill_t0 = _INF
+            for rec in w.inv_recs:
+                rec.end = now
+            w.inv_recs = []
+            w.inv_gen += 1
+            w.cap_gen += 1
+            return
         for rec in w.inv_recs:
             mem = self.mem[rec.worker_id]
             for r in self.platform.finish(rec, mem, now):
@@ -1731,11 +1803,42 @@ class EventEngine:
                 pending()
             # else: worker was waiting at a barrier/gate — stays waiting
 
-        self._begin_invocation(w, self.init_s + self.restore_s, resume,
+        self._begin_invocation(w, self._restart_overhead(), resume,
                                resumed=True)
+
+    def _restart_overhead(self) -> float:
+        """Re-invocation overhead: init + checkpoint restore, plus — for a
+        spot backend under the "wait" policy — the unbilled wait until the
+        spot price drops back below the bid (capacity is unavailable while
+        the market is above it; billing re-arms only at ``_invoke_armed``)."""
+        overhead = self.init_s + self.restore_s
+        be = self.backend
+        if (be is not None and be.spot and be.spot_policy == "wait"
+                and not self._spot_fallback):
+            now_rel = self.now - self._t0
+            recover = be.price_trace.next_drop_below(now_rel, be.bid_usd_per_hr)
+            if math.isinf(recover):
+                raise ValueError("spot price never drops back below the bid; "
+                                 "the wait policy cannot recover")
+            overhead += max(recover - now_rel, 0.0)
+        return overhead
 
     # -- correlated (shock) failures -----------------------------------------
     def _schedule_next_shock(self):
+        if self.shocks.price_trace is not None:
+            # deterministic arrivals: one shock per up-crossing of the
+            # bid. A spike already in progress is skipped — the next kill
+            # fires at the next genuine below->above transition.
+            trace, bid = self.shocks.price_trace, self.shocks.bid_usd_per_hr
+            t_rel = self.now - self._t0
+            if trace.price_at(t_rel) > bid:
+                t_rel = trace.next_drop_below(t_rel, bid)
+                if math.isinf(t_rel):
+                    return               # above the bid forever: no crossings
+            t_rel = trace.next_crossing_above(t_rel, bid)
+            if not math.isinf(t_rel):
+                self._at(self._t0 + t_rel, self._shock_fire)
+            return
         dt = float(self._shock_rng.exponential(self.shocks.interval_s))
         self._at(self.now + max(dt, 1e-9), self._shock_fire)
 
@@ -1743,8 +1846,11 @@ class EventEngine:
         """One shared shock: every eligible in-flight worker of the target
         tier dies with probability ``kill_frac`` — a correlated burst, not
         n independent coin flips spread over iterations. The fleet's kill
-        coins are one vectorized draw per shock."""
-        if self._stopping or self._unfinished == 0:
+        coins are one vectorized draw per shock. Price-driven shocks
+        (``ShockModel.price_trace``) additionally count as spot
+        preemptions; under the backend's "fallback" spot policy the first
+        one flips billing to on-demand and ends the preemption process."""
+        if self._stopping or self._unfinished == 0 or self._spot_fallback:
             return                               # epoch over: stop the process
         us = self._shock_rng.random_sample(self.n)
         killed = 0
@@ -1753,9 +1859,18 @@ class EventEngine:
             if self.shocks.tier is not None and tier != self.shocks.tier:
                 continue
             if us[w.wid] < self.shocks.kill_frac and self._shock_kill(w):
-                killed += 1
+                killed += w.count
         if killed:
             self._shock_events += 1
+            if self.shocks.price_trace is not None:
+                self._preemptions += killed
+                be = self.backend
+                if be is not None and be.spot and be.spot_policy == "fallback":
+                    # the kill itself billed at the spot price (settled in
+                    # _close_invocation before this flag flips); everything
+                    # after re-arms at the on-demand rate, preemption-free
+                    self._spot_fallback = True
+                    return
         self._schedule_next_shock()
 
     def _shock_kill(self, w: _WorkerState) -> bool:
@@ -2044,7 +2159,8 @@ class EventEngine:
             failures=self._failures, invocations=self._requests,
             iter_times=self._iter_times, stopped_early=self._stopping,
             trace=self._trace, shock_events=self._shock_events,
-            sim_events=self._levents)
+            sim_events=self._levents, backend_usd=self._backend_usd,
+            preemptions=self._preemptions)
         return self._result
 
 

@@ -16,6 +16,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.serverless.backends import PriceTrace
+
 
 LAMBDA_GB_SECOND = 1.6667e-5
 LAMBDA_PER_REQUEST = 2e-7
@@ -134,16 +136,27 @@ class ShockModel:
     every in-flight worker of the targeted ``tier`` (None = all tiers) dies
     independently with probability ``kill_frac`` — so one shock can kill a
     random subset of the fleet at once, unlike the per-iteration
-    independent ``failure_rate``."""
+    independent ``failure_rate``.
+
+    With a ``price_trace`` + ``bid_usd_per_hr``, arrivals switch from
+    Poisson to *deterministic*: a shock fires at every up-crossing of the
+    bid by the spot price (engine-relative time), modeling correlated
+    spot-market preemptions. ``kill_frac`` / ``tier`` still select which
+    workers each crossing kills (e.g. only the "spot" tier of a mixed
+    fleet)."""
     interval_s: float
     kill_frac: float = 0.5
     tier: Optional[str] = None
+    price_trace: Optional[PriceTrace] = None
+    bid_usd_per_hr: float = 0.0
 
     def __post_init__(self):
         if self.interval_s <= 0:
             raise ValueError("shock interval_s must be positive")
         if not 0.0 <= self.kill_frac <= 1.0:
             raise ValueError("shock kill_frac must be in [0, 1]")
+        if self.price_trace is not None and self.bid_usd_per_hr <= 0:
+            raise ValueError("price-driven shocks need a positive bid")
 
 
 @dataclasses.dataclass

@@ -27,6 +27,7 @@ import numpy as np
 from repro.core.rng import base_stream
 from repro.core.comm import (CommLike, CommPlan, CommSpec, build_plan,
                              overlap_iteration_time, plan_times)
+from repro.serverless.backends import BackendLike, resolve_backend
 from repro.serverless.platform import FleetSpec, fn_gflops, fn_net_gbps
 from repro.serverless.stores import ObjectStore, ParamStore
 
@@ -61,8 +62,12 @@ WORKLOADS = {
 }
 
 
-def compute_time(w: Workload, local_batch: float, memory_mb: float) -> float:
-    return w.flops_per_sample * local_batch / (fn_gflops(memory_mb) * 1e9)
+def compute_time(w: Workload, local_batch: float, memory_mb: float,
+                 gflops: Optional[float] = None) -> float:
+    """Per-iteration compute seconds; ``gflops`` overrides the
+    memory-derived function rate (VM/GPU backends have flat rates)."""
+    rate = gflops if gflops is not None else fn_gflops(memory_mb)
+    return w.flops_per_sample * local_batch / (rate * 1e9)
 
 
 def fleet_local_batches(fleet: FleetSpec, global_batch: int) -> List[float]:
@@ -104,7 +109,8 @@ def comm_breakdown(scheme: CommLike, grad_bytes: float, n_workers: int,
 def iteration_time(w: Workload, scheme: CommLike, n_workers: int,
                    memory_mb: float, global_batch: int,
                    param_store: ParamStore, object_store: ObjectStore, *,
-                   fleet: Optional[FleetSpec] = None) -> Dict[str, float]:
+                   fleet: Optional[FleetSpec] = None,
+                   backend: BackendLike = None) -> Dict[str, float]:
     """Closed-form per-iteration time. With a ``fleet``, the mixed-memory
     approximation the Bayesian optimizer probes with: load-aware batch
     placement makes compute ``flops * batch / sum(worker rates)`` (exact,
@@ -122,7 +128,15 @@ def iteration_time(w: Workload, scheme: CommLike, n_workers: int,
     or not; ``store_busy`` is likewise unchanged by overlap, since a
     hidden transfer still holds the store)."""
     n_workers = len(fleet) if fleet is not None else n_workers
-    if fleet is None or fleet.is_homogeneous:
+    spec = resolve_backend(backend)
+    if spec is not None:
+        # VM-kind backend: a flat per-worker compute rate and NIC make
+        # the fleet homogeneous regardless of the memory tiers
+        local_batch = max(global_batch // n_workers, 1)
+        comp = compute_time(w, local_batch, memory_mb,
+                            gflops=spec.gflops_for(memory_mb))
+        net_override = spec.net_gbps_for(memory_mb)
+    elif fleet is None or fleet.is_homogeneous:
         mem = fleet.memories[0] if fleet is not None else memory_mb
         local_batch = max(global_batch // n_workers, 1)
         comp = compute_time(w, local_batch, mem)

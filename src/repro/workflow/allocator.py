@@ -99,7 +99,8 @@ class BudgetAllocator:
                 self._probe_usd[t.name] = 0.0
                 continue
             _, usd, _ = DEFAULT_CACHE.profile_cost(
-                t.workload, scheme, Config(n_probe, mem_probe),
+                t.workload, scheme,
+                Config(n_probe, mem_probe, backend=t.backend),
                 t.batch_size, param_store, object_store, profile_iters)
             self._probe_usd[t.name] = usd * bo_max_iters
         self.forecasts: Dict[str, TaskForecast] = {
@@ -129,8 +130,13 @@ class BudgetAllocator:
             return [(n, wall, cost) for n in self._grid]
         out = []
         for n in self._grid:
+            # a pinned task backend prices the curve at that target's
+            # provisioning/flat-rate semantics (Config.backend flows
+            # through cost_model._config_backend)
             est = DEFAULT_CACHE.epoch_estimate(t.workload, self.scheme,
-                                 Config(n, self.memory_mb), t.batch_size,
+                                 Config(n, self.memory_mb,
+                                        backend=t.backend),
+                                 t.batch_size,
                                  param_store, object_store,
                                  samples=t.samples)
             out.append((n, est.wall_s * t.epochs, est.cost_usd * t.epochs))

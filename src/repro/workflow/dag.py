@@ -44,7 +44,13 @@ class TaskSpec:
     ``TaskScheduler`` run (``workload`` then names the *served* model).
     An ``online_update`` task runs the training path on the samples that
     arrived since the last update (the caller sizes ``samples`` from its
-    arrival stream)."""
+    arrival stream).
+
+    ``backend`` pins the task to an execution target from
+    ``repro.serverless.backends.BACKENDS`` ("vm", "gpu_vm", ...): the
+    allocator forecasts the task at that backend's rates and the
+    orchestrator runs it there. "" leaves the choice to the scheduler's
+    config search (serverless unless the space searches backends)."""
     name: str
     workload: Workload
     epochs: int = 1
@@ -60,6 +66,7 @@ class TaskSpec:
     rung: int = -1
     slot: int = -1
     serving: Optional[ServingTask] = None
+    backend: str = ""
 
     def __post_init__(self):
         object.__setattr__(self, "deps", tuple(self.deps))

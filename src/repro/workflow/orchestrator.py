@@ -253,13 +253,22 @@ class WorkflowOrchestrator:
         space = dataclasses.replace(self.space,
                                     min_workers=alloc.min_workers,
                                     max_workers=alloc.max_workers)
+        # per-task engine opts: the allocator's task priority becomes the
+        # training job's SharedLink flow priority (water-filling weight
+        # against co-running tasks and serving traffic on the same
+        # domain), and a pinned task backend overrides the search
+        opts = dict(self.engine_opts)
+        if "link_priority" not in opts:
+            opts["link_priority"] = float(max(spec.priority, 1))
+        if spec.backend and "backend" not in opts:
+            opts["backend"] = spec.backend
         sched = TaskScheduler(
             self.platform, self.object_store, self.param_store,
             space=space, scheme=self.scheme,
             profile_iters=self.profile_iters,
             bo_max_iters=self.bo_max_iters,
             seed=self._task_seed(spec.name), engine=self.engine,
-            engine_opts=self.engine_opts,
+            engine_opts=opts,
             mid_epoch_adapt=self.mid_epoch_adapt, job=spec.name)
         # the task's own goal wins; otherwise its slice of the workflow
         # goal, with the absolute allocation deadline made task-relative

@@ -11,5 +11,17 @@ def bill(wall_s, rate_usd, state_mb, quota_gb, bw_gbps):
     return total_usd, budget_s, ok_usd
 
 
+def spot_bill(rate_usd_per_s, price_usd_per_hr, bid_usd_per_hr, wall_s):
+    blended = rate_usd_per_s + price_usd_per_hr   # unit-mix (line 15)
+    if price_usd_per_hr > bid_usd_per_hr:         # like rates: not flagged
+        blended = rate_usd_per_s
+    if rate_usd_per_s > bid_usd_per_hr:           # unit-mix (line 18)
+        pass
+    spend_usd = price_usd_per_hr                  # unit-assign (line 20)
+    charge(keepalive_s=rate_usd_per_s)            # unit-assign (line 21)
+    ok_usd = wall_s * rate_usd_per_s              # conversion: not flagged
+    return blended, spend_usd, ok_usd
+
+
 def charge(keepalive_s=0.0):
     return keepalive_s

@@ -28,9 +28,10 @@ try:
 except ImportError:                      # optional dep
     from hypothesis_fallback import given, settings, st
 
-from repro.serverless import (WORKLOADS, ContentionDomain, EventEngine,
-                              FleetSpec, ObjectStore, ParamStore,
-                              ServerlessPlatform, ShockModel)
+from repro.serverless import (BACKENDS, WORKLOADS, ContentionDomain,
+                              EventEngine, FleetSpec, ObjectStore, ParamStore,
+                              PriceTrace, ServerlessPlatform, ShockModel,
+                              spot_variant)
 from repro.serverless.platform import (DATA_OBJECT_BYTES, LAMBDA_GB_SECOND,
                                        LAMBDA_PER_REQUEST)
 from repro.serverless.stores import ECS_GB_HOUR, ECS_VCPU_HOUR, S3_GET_PER_1K
@@ -41,7 +42,7 @@ SAMPLES = 3 * BATCH                      # 3 iterations: fast but non-trivial
 
 
 def _build(scheme, n, mem, sigma, failure_rate, sync_mode, hetero, shocked,
-           seed, depth=1):
+           seed, depth=1, backend=None):
     from repro.core.comm import CommSpec, parse_scheme
     if scheme == "tree":                 # asymmetric-participation CommPlan
         scheme = CommSpec("hier", branching=2)
@@ -58,7 +59,8 @@ def _build(scheme, n, mem, sigma, failure_rate, sync_mode, hetero, shocked,
     eng = EventEngine(W, scheme, n, mem, BATCH, ParamStore(), ObjectStore(),
                       samples=SAMPLES, straggler_sigma=sigma,
                       failure_rate=failure_rate, sync_mode=sync_mode,
-                      fleet=fleet, shocks=shocks, platform=plat, seed=seed)
+                      fleet=fleet, shocks=shocks, platform=plat, seed=seed,
+                      backend=backend)
     return eng, plat
 
 
@@ -138,19 +140,114 @@ def test_engine_invariants_hold_for_random_configs(
        sigma=st.sampled_from((0.0, 0.5)),
        shocked=st.sampled_from((False, True)),
        depth=st.sampled_from((1, 4)),
+       backend=st.sampled_from((None, "vm", "gpu_vm")),
        seed=st.integers(0, 9999))
 def test_same_seed_runs_are_bit_identical(scheme, n, sigma, shocked, depth,
-                                          seed):
+                                          backend, seed):
     runs = []
     for _ in range(2):
         eng, _plat = _build(scheme, n, 2048, sigma, 0.03, "bsp", True,
-                            shocked, seed, depth=depth)
+                            shocked, seed, depth=depth, backend=backend)
         runs.append(eng.run())
     a, b = runs
     assert a.trace == b.trace
     assert a.wall_s == b.wall_s
     assert a.lambda_usd == b.lambda_usd and a.store_usd == b.store_usd
+    assert a.backend_usd == b.backend_usd
     assert a.invocations == b.invocations and a.failures == b.failures
+
+
+# -- multi-backend execution: vm / gpu_vm / spot -----------------------------
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(backend=st.sampled_from(("vm", "gpu_vm")),
+       scheme=st.sampled_from(("hier", "ps")),
+       n=st.integers(2, 8),
+       sigma=st.sampled_from((0.0, 0.4)),
+       seed=st.integers(0, 9999))
+def test_vm_backends_bill_per_second_without_requests(backend, scheme, n,
+                                                      sigma, seed):
+    """A VM-kind backend bills per second of post-provisioning lifetime:
+    the Lambda meters (requests, GB-seconds) never move, the provisioning
+    gap contributes nothing, and the platform ledger carries exactly the
+    engine's backend total."""
+    eng, plat = _build(scheme, n, 2048, sigma, 0.0, "bsp", False, False,
+                       seed, backend=backend)
+    r = eng.run()
+    spec = BACKENDS[backend]
+    assert r.invocations == 0 and r.lambda_usd == 0.0
+    assert r.restarts == 0               # uncapped: no duration-cap splits
+    # per-second audit from the invocation records: billing arms when
+    # provisioning + framework init completes (the worker's first
+    # ``init_s`` seconds are the unbilled provisioning gap)
+    billed_s = sum(rec.end - rec.start - eng.init_s
+                   for rec in plat.invocations)
+    assert r.backend_usd == pytest.approx(billed_s * spec.usd_per_s, rel=1e-9)
+    assert r.backend_usd > 0.0
+    assert plat.ledger.extra[f"backend:{backend}"] == pytest.approx(
+        r.backend_usd, rel=1e-9)
+    assert r.cost_usd == r.lambda_usd + r.store_usd + r.backend_usd
+    # the epoch itself still completes like any serverless run
+    assert r.iters_done == max(math.ceil(SAMPLES / BATCH), 1)
+    assert not r.stopped_early
+
+
+def test_spot_preemption_loses_work_but_never_double_bills():
+    """A spot price crossing kills the fleet mid-epoch: the in-flight
+    work is lost and redone (never skipped), and every invocation record
+    is billed exactly once — pre-preemption lifetimes integrate the spot
+    trace, post-preemption lifetimes bill at the policy's rate, and their
+    sum reproduces ``backend_usd`` to the penny."""
+    n, seed, bid = 4, 7, 0.2
+    base = BACKENDS["vm"]
+    # calibrate with a quiet trace (never crosses the bid): no preemptions
+    quiet = spot_variant(base, PriceTrace((0.0,), (0.10,)),
+                         bid_usd_per_hr=bid)
+    eng0, _ = _build("ps", n, 2048, 0.0, 0.0, "bsp", False, False, seed,
+                     backend=quiet)
+    r0 = eng0.run()
+    assert r0.preemptions == 0
+    # one spike above the bid in the middle of that calibrated window
+    t1, t2 = 0.4 * r0.wall_s, 0.5 * r0.wall_s
+    trace = PriceTrace((0.0, t1, t2), (0.10, 1.00, 0.10))
+    results = {}
+    for policy in ("fallback", "wait"):
+        spec = spot_variant(base, trace, bid_usd_per_hr=bid,
+                            spot_policy=policy)
+        eng, plat = _build("ps", n, 2048, 0.0, 0.0, "bsp", False, False,
+                           seed, backend=spec)
+        r = eng.run()
+        results[policy] = r
+        assert r.preemptions == n and r.shock_events == 1
+        assert r.failures == n           # the kill is a correlated failure
+        assert r.wall_s > r0.wall_s      # lost work is redone, never skipped
+        assert r.iters_done == r0.iters_done and not r.stopped_early
+        # exactly-once billing audit over the invocation records
+        usd = 0.0
+        for rec in plat.invocations:
+            if not rec.resumed:          # armed post-init, killed at t1
+                usd += trace.integral_usd(rec.start - eng._t0 + eng.init_s,
+                                          rec.end - eng._t0)
+            elif policy == "fallback":   # re-armed at the on-demand rate
+                armed = rec.start + eng.init_s + eng.restore_s
+                usd += (rec.end - armed) * base.usd_per_s
+            else:                        # waited out the spike, still spot
+                armed = (trace.next_drop_below(rec.start - eng._t0, bid)
+                         + eng.init_s + eng.restore_s)
+                usd += trace.integral_usd(armed, rec.end - eng._t0)
+        assert r.backend_usd == pytest.approx(usd, rel=1e-9)
+        assert plat.ledger.extra[f"backend:{spec.name}"] == pytest.approx(
+            r.backend_usd, rel=1e-9)
+        assert r.invocations == 0 and r.lambda_usd == 0.0
+        # determinism: the same spot run replays bit-identically
+        eng2, _ = _build("ps", n, 2048, 0.0, 0.0, "bsp", False, False,
+                         seed, backend=spec)
+        r2 = eng2.run()
+        assert r2.trace == r.trace and r2.backend_usd == r.backend_usd
+    # the wait policy idles through the spike the fallback pays to skip
+    assert results["wait"].wall_s == pytest.approx(
+        results["fallback"].wall_s + (t2 - t1), rel=1e-9)
+    assert results["wait"].backend_usd < results["fallback"].backend_usd
 
 
 def test_multi_job_domain_preserves_per_job_invariants():

@@ -52,8 +52,8 @@ def test_determinism_rules(bad):
 
 def test_unit_rules(bad):
     f = "known_bad/bad_units.py"
-    assert _at(bad, f, "unit-mix") == [5, 6, 7]
-    assert _at(bad, f, "unit-assign") == [8, 9]
+    assert _at(bad, f, "unit-mix") == [5, 6, 7, 15, 18]
+    assert _at(bad, f, "unit-assign") == [8, 9, 20, 21]
     # multiplication is a conversion: line 10 must NOT be flagged
     assert all(x.line != 10 for x in bad if x.path.endswith(f))
 

@@ -146,9 +146,11 @@ def test_fleet_config_estimate_and_search_space():
     fracs = {c.small_frac for c in cands}
     assert fracs == set(space.small_frac_choices)
     # the GP input embeds every search dimension, incl. the comm plan
-    assert all(len(c.as_unit(space)) == 7 for c in cands)
+    # and the execution backend
+    assert all(len(c.as_unit(space)) == 8 for c in cands)
     assert all(c.comm == "" and c.compress_ratio == 1.0
-               and c.pipeline_depth == 1 for c in cands)
+               and c.pipeline_depth == 1 and c.backend == ""
+               for c in cands)
 
 
 def test_comm_search_space_samples_plans():
@@ -165,7 +167,7 @@ def test_comm_search_space_samples_plans():
     assert {c.pipeline_depth for c in cands} == set(space.depth_choices)
     for c in cands:
         u = c.as_unit(space)
-        assert len(u) == 7 and (u >= 0.0).all() and (u <= 1.0).all()
+        assert len(u) == 8 and (u >= 0.0).all() and (u <= 1.0).all()
 
 
 def test_optimizer_selects_nontrivial_comm_plan():
